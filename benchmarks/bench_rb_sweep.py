@@ -1,0 +1,43 @@
+"""Paper Figs. 3 & 5 (+ Fig. 11): the (R, B) configuration sweep for the
+recurrence and single-pass variants — chain length R x block size B.
+
+On GPU the paper found B=32,R=5 (recurrence) and B=128,R=4 (single-pass)
+fastest; the PRAM model says R=1.  We sweep the same grid on (a) the
+Pallas kernel in interpret mode for correctness, (b) XLA-CPU wall-clock
+of the pure-JAX core, and (c) the chained cost model T^R(n)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core import tc_reduce, theory
+from repro.core.precision import normal_input
+from repro.kernels import mma_reduce
+
+N = 1 << 20
+CHAINS = [1, 2, 4, 5, 8]
+BLOCKS = [32, 128, 512]     # paper B (threads/block) -> rows per tile
+
+
+def run():
+    x = jnp.asarray(normal_input(N, seed=2).astype(np.float32))
+    want = float(np.sum(np.asarray(x), dtype=np.float64))
+    for chain in CHAINS:
+        # PRAM prediction (infinite processors):
+        emit(f"rb_sweep/theory/R={chain}", 0.0,
+             f"T={theory.t_tc_chained(N, 128, chain):.2f}")
+        us = time_us(lambda v, c=chain: tc_reduce(v, chain=c), x)
+        got = float(tc_reduce(x, chain=chain))
+        emit(f"rb_sweep/core_single_pass/R={chain}", us,
+             f"err={abs(got - want):.2e}")
+        for b in BLOCKS:
+            got_k = float(mma_reduce(x, variant="single_pass",
+                                     chain=chain, block_rows=b))
+            emit(f"rb_sweep/pallas/R={chain}/B={b}", 0.0,
+                 f"err={abs(got_k - want):.2e};interpret=1")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 7 (top) + Fig. 8 (left): runtime / throughput of the three
+variants vs the classic reduction, across n; plus theory-vs-practice
+speedup (paper §7: S(m=4)=3.2 matched experiment; here m=128 -> 11.2)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core import tc_reduce, theory
+from repro.core.precision import normal_input
+
+SIZES = [1 << 16, 1 << 20, 1 << 24]
+VARIANTS = ["single_pass", "recurrence", "split"]
+
+
+def run():
+    for n in SIZES:
+        x = jnp.asarray(normal_input(n, seed=1).astype(np.float32))
+        base_us = time_us(lambda v: jnp.sum(v), x)
+        emit(f"reduction/jnp_sum/n={n}", base_us,
+             f"beps={n / base_us / 1e3:.2f}")
+        for variant in VARIANTS:
+            us = time_us(
+                lambda v, va=variant: tc_reduce(v, variant=va), x)
+            emit(f"reduction/{variant}/n={n}", us,
+                 f"beps={n / us / 1e3:.2f};cpu_speedup_vs_sum="
+                 f"{base_us / us:.2f}")
+        # theory speedups for this n (TPU-relevant derivation)
+        emit(f"reduction/theory/n={n}", 0.0,
+             f"S_m4={theory.speedup(4):.2f};S_m128="
+             f"{theory.speedup(128):.2f};T_tc="
+             f"{theory.t_tc(n, 128):.2f};T_classic="
+             f"{theory.t_classic(n):.2f}")
+        oc = theory.op_count(n, m=128, chain=4)
+        emit(f"reduction/opcount/n={n}", 0.0,
+             f"mma_ops={oc.mma_ops};mxu_flops={oc.mxu_flops};"
+             f"useful={oc.useful_flops}")
+
+
+if __name__ == "__main__":
+    run()

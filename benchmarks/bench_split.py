@@ -1,0 +1,30 @@
+"""Paper Fig. 6: the split variant — fraction f of the domain on the
+matrix unit, 1-f on the vector unit (paper §5.3).  On TPU the MXU and
+VPU genuinely co-execute, which is the paper's hypothesis; the dry-run
+HLO shows both op classes issued."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core import tc_reduce
+from repro.core.precision import normal_input
+
+N = 1 << 20
+FRACTIONS = [0.0, 0.2, 0.4, 0.5, 0.6, 0.8, 0.95, 1.0]
+
+
+def run():
+    x = jnp.asarray(normal_input(N, seed=3).astype(np.float32))
+    want = float(np.sum(np.asarray(x), dtype=np.float64))
+    for f in FRACTIONS:
+        us = time_us(lambda v, fr=f: tc_reduce(v, variant="split",
+                                               mma_fraction=fr), x)
+        got = float(tc_reduce(x, variant="split", mma_fraction=f))
+        emit(f"split/f={f}", us, f"err={abs(got - want):.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities.
+
+IMPORTANT CONTEXT (recorded in every CSV): this container is CPU-only.
+Wall-clock numbers are XLA-CPU timings of the *pure-JAX* chained-MMA
+reduction (repro.core) vs the classic `jnp.sum`; they demonstrate the
+harness, not TPU performance.  TPU-relevant evidence is (a) the PRAM
+cost model (core.theory), (b) HLO op/flop accounting, and (c) the
+precision experiments (bit-exact bf16 on any backend).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.2f},{derived}")

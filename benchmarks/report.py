@@ -1,0 +1,90 @@
+"""Generate the EXPERIMENTS.md §Dry-run table from the dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def gib(b):
+    return "-" if b is None else f"{b / 2**30:.1f}"
+
+
+def dryrun_table(dry_dir: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        if base.count("__") != 2:      # skip perf-variant tags
+            continue
+        rec = json.load(open(f))
+        rows.append(rec)
+    out = ("| arch | shape | mesh | status | compile s | args GiB/dev | "
+           "temp GiB/dev | collective schedule (per-device GiB) |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"])):
+        if not r.get("runnable", True):
+            out += (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"SKIP | - | - | - | {r['skip_reason'][:60]}... |\n")
+            continue
+        ma = r.get("memory_analysis", {})
+        colls = r.get("collectives", {})
+        sched = "; ".join(
+            f"{k} x{v['count']} {v['bytes'] / 2**30:.2f}"
+            for k, v in sorted(colls.items()) if isinstance(v, dict))
+        status = "OK" if r.get("ok") else "FAIL"
+        out += (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {status} | "
+                f"{r.get('compile_s', '-')} | "
+                f"{gib(ma.get('argument_size_in_bytes'))} | "
+                f"{gib(ma.get('temp_size_in_bytes'))} | {sched or '-'} |\n")
+    return out
+
+
+def perf_variants(dry_dir: str) -> str:
+    """Baseline-vs-variant comparison for tagged perf runs."""
+    tagged = {}
+    for f in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if len(parts) == 4:
+            tagged.setdefault((parts[0], parts[1], parts[2]),
+                              []).append((parts[3], json.load(open(f))))
+    out = ""
+    for (arch, shape, mesh), variants in sorted(tagged.items()):
+        basefile = os.path.join(dry_dir, f"{arch}__{shape}__{mesh}.json")
+        if not os.path.exists(basefile):
+            continue
+        base = json.load(open(basefile))
+        rows = [("baseline", base)] + variants
+        out += f"\n### {arch} x {shape} ({mesh})\n\n"
+        out += ("| variant | flops/dev | bytes/dev | coll bytes/dev | "
+                "temp GiB |\n|---|---|---|---|---|\n")
+        for tag, r in rows:
+            acc = r.get("accounting", {})
+            ma = r.get("memory_analysis", {})
+            out += (f"| {tag} | {acc.get('flops_per_device', 0):.3e} | "
+                    f"{acc.get('bytes_per_device', 0):.3e} | "
+                    f"{acc.get('collective_bytes_per_device', 0):.3e} | "
+                    f"{gib(ma.get('temp_size_in_bytes'))} |\n")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--what", default="dryrun",
+                    choices=["dryrun", "perf"])
+    args = ap.parse_args()
+    if args.what == "dryrun":
+        print(dryrun_table(args.dir))
+    else:
+        print(perf_variants(args.dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs    / (chips * 197e12 FLOP/s)   [bf16 MXU]
+    memory term     = HLO_bytes    / (chips * 819e9  B/s)      [HBM]
+    collective term = coll_bytes   / (chips * 50e9   B/s)      [ICI link]
+
+HLO_FLOPs / bytes / collective bytes are the *full-depth reconstructed*
+values from the dry-run accounting compiles (XLA counts while bodies
+once; see launch/dryrun.py), multiplied back to pod totals.  MODEL_FLOPS
+is the analytic 6*N_active*D (train) / 2*N_active*D (inference), so the
+ratio MODEL/HLO exposes remat recompute + dispatch overhead + dead work.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+CHIPS = 256
+# Primary target: TPU v5e.  The alternate "--hw v5p" table mirrors the
+# paper's dual-GPU evaluation (V100 body + Titan RTX Appendix B).
+HW = {
+    "v5e": dict(peak=197e12, hbm=819e9, link=50e9),
+    "v5p": dict(peak=459e12, hbm=2765e9, link=100e9),
+}
+PEAK_FLOPS = HW["v5e"]["peak"]
+HBM_BW = HW["v5e"]["hbm"]
+LINK_BW = HW["v5e"]["link"]
+
+SUGGEST = {
+    ("compute", "train"): "cut recompute (remat policy) and MoE dispatch "
+                          "dead-work; MODEL/HLO ratio shows the headroom",
+    ("compute", "prefill"): "reduce attention dead-work (causal chunks "
+                            "computed then masked) and upcast waste",
+    ("compute", "decode"): "batch is latency-bound; fuse projections and "
+                           "shard attention heads over 'model'",
+    ("memory", "train"): "fuse norms/elementwise into matmuls (Pallas), "
+                         "bf16 master-weight cast once per step",
+    ("memory", "prefill"): "stream KV chunks (flash) to avoid spilling "
+                           "the S x S score buffer",
+    ("memory", "decode"): "decode is weight/KV-bandwidth bound: shrink "
+                          "KV (MLA/windows), quantise weights",
+    ("collective", "train"): "overlap grad reduce-scatter with backward; "
+                             "compress (int8 EF) gradients",
+    ("collective", "prefill"): "re-shard activations to cut all-gathers "
+                               "(sequence parallelism)",
+    ("collective", "decode"): "replace vocab all-gather at sampling with "
+                              "sharded top-k; cache-resident a2a",
+}
+
+
+def model_flops(cfg, shape_cfg, num_params: int) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D (train), 2*N_active*D (else)."""
+    n_active = num_params
+    if cfg.moe is not None:
+        n_moe_layers = cfg.num_layers - cfg.moe.first_dense_layers
+        inactive = 3 * cfg.d_model * cfg.moe.d_ff_expert \
+            * (cfg.moe.num_experts - cfg.moe.top_k) * n_moe_layers
+        n_active = num_params - inactive
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n_active * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape_cfg.global_batch   # decode: 1 tok/seq
+
+
+def analyse(rec: dict, hw: str = "v5e") -> dict:
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+    cfg = registry.get_config(rec["arch"])
+    shape_cfg = SHAPES[rec["shape"]]
+    acc = rec["accounting"]
+    flops_dev = acc["flops_per_device"]
+    bytes_dev = acc["bytes_per_device"]
+    coll_dev = acc["collective_bytes_per_device"]
+    struct_dev = acc.get("structural_bytes_per_device", 0.0)
+
+    PEAK_FLOPS, HBM_BW, LINK_BW = (HW[hw]["peak"], HW[hw]["hbm"],
+                                   HW[hw]["link"])
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory_xla = bytes_dev / HBM_BW
+    # structural bytes (dot/scatter/gather/collective traffic only) model
+    # TPU HBM better: elementwise chains fuse on TPU, while XLA-CPU's
+    # 'bytes accessed' counts every unfused pass.  Fall back to the raw
+    # metric when the cell predates the structural parser.
+    t_memory = (struct_dev / HBM_BW) if struct_dev else t_memory_xla
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dom = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape_cfg, rec["num_params"])
+    hlo_total = flops_dev * CHIPS
+    ratio = mf / hlo_total if hlo_total else float("nan")
+    t_model = mf / (CHIPS * PEAK_FLOPS)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_compute, "memory_s": t_memory,
+        "memory_xla_s": t_memory_xla,
+        "collective_s": t_coll, "dominant": dom,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "model_hlo_ratio": ratio,
+        # useful-work time over bottleneck time = roofline fraction cap
+        "roofline_fraction": (t_model / bound) if bound else 0.0,
+        "suggestion": SUGGEST[(dom, shape_cfg.kind)],
+        "temp_bytes_dev": rec.get("memory_analysis", {})
+                             .get("temp_size_in_bytes"),
+        "arg_bytes_dev": rec.get("memory_analysis", {})
+                            .get("argument_size_in_bytes"),
+    }
+
+
+def load_all(dry_dir: str, hw: str = "v5e"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dry_dir, "*__pod.json"))):
+        rec = json.load(open(f))
+        if rec.get("ok") and "accounting" in rec:
+            rows.append(analyse(rec, hw=hw))
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | coll s | dominant | "
+           "MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        body += (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+                 f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+                 f"**{r['dominant']}** | {r['model_hlo_ratio']:.2f} | "
+                 f"{r['roofline_fraction']:.2f} |\n")
+    return hdr + body
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--hw", default="v5e", choices=sorted(HW))
+    args = ap.parse_args()
+    rows = load_all(args.dir, hw=args.hw)
+    out = args.out if args.hw == "v5e" else \
+        args.out.replace(".json", f"_{args.hw}.json")
+    json.dump(rows, open(out, "w"), indent=1)
+    print(markdown_table(rows))
+    print(f"({len(rows)} cells, {args.hw} -> {out})")
+
+
+if __name__ == "__main__":
+    main()

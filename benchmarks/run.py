@@ -1,0 +1,62 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+  reduction   — Fig. 7 top / Fig. 8 left (runtime, BEPS, speedups)
+  rb_sweep    — Figs. 3, 5, 11 (chain R x block B configuration grid)
+  split       — Fig. 6 (MXU/VPU split fraction)
+  precision   — Fig. 7 bottom / Fig. 8 right (% error vs FP64 oracle)
+  integration — reduction engine inside the LM stack (loss/grad-norm)
+  roofline    — §Roofline summary from the dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_precision, bench_rb_sweep,
+                            bench_reduction, bench_split)
+    bench_reduction.run()
+    bench_rb_sweep.run()
+    bench_split.run()
+    bench_precision.run()
+
+    # integration micro-bench: the MMA engine as used by the framework
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import emit, time_us
+    from repro.core import global_norm, masked_mean
+
+    rng = np.random.default_rng(0)
+    tree = {f"w{i}": jnp.asarray(rng.normal(size=(256, 256))
+                                 .astype(np.float32)) for i in range(8)}
+    gn = jax.jit(lambda t: global_norm(t, method="mma"))
+    gn_vpu = jax.jit(lambda t: global_norm(t, method="vpu"))
+    emit("integration/global_norm_mma", time_us(gn, tree), "method=mma")
+    emit("integration/global_norm_vpu", time_us(gn_vpu, tree),
+         "method=vpu")
+    v = jnp.asarray(rng.normal(size=(64, 512)).astype(np.float32))
+    m = jnp.ones_like(v)
+    mm = jax.jit(lambda a, b: masked_mean(a, b, method="mma"))
+    emit("integration/masked_mean_mma", time_us(mm, v, m), "method=mma")
+
+    # roofline summary (reads dry-run artifacts when they exist)
+    dry = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+    if os.path.isdir(dry):
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        from benchmarks.roofline import load_all
+        rows = load_all(dry)
+        for r in rows:
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                 f"dominant={r['dominant']};frac="
+                 f"{r['roofline_fraction']:.3f};ratio="
+                 f"{r['model_hlo_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json      (step, leaf paths, shapes, dtypes)
+            arrays.npz         (flattened leaves keyed by tree path)
+         <dir>/LATEST          (atomic pointer file)
+
+Guarantees:
+  * step-atomic: a checkpoint becomes visible only after its directory is
+    fully written and LATEST is renamed over;
+  * elastic: arrays are stored *unsharded* (logical shapes), so a restore
+    may re-shard onto any mesh — device_put against the restore
+    template's shardings (fault_tolerance.remesh builds that template);
+  * async: ``save_async`` snapshots to host memory synchronously then
+    writes on a background thread (training continues).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        flat = _flatten(tree)
+        arrays = {k: np.asarray(v) for k, v in flat.items()}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for k, a in arrays.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+class AsyncSaver:
+    """Snapshot-to-host synchronously, write asynchronously."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save_async(self, directory: str, step: int, tree: Any):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot
+
+        def run():
+            try:
+                save(directory, step, host_tree)
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+
+def latest_step(directory: str) -> Optional[int]:
+    ptr = os.path.join(directory, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore(directory: str, template: Any,
+            step: Optional[int] = None) -> tuple[Any, int]:
+    """Restore into ``template``'s structure/shardings (elastic re-shard:
+    the template may live on a different mesh than the save did)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t[0]:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in p)
+        arr = data[key]
+        if hasattr(leaf, "sharding") and leaf.sharding is not None \
+                and not isinstance(leaf, jax.ShapeDtypeStruct):
+            leaves.append(jax.device_put(arr.astype(leaf.dtype),
+                                         leaf.sharding))
+        elif isinstance(leaf, jax.ShapeDtypeStruct) \
+                and leaf.sharding is not None:
+            leaves.append(jax.device_put(arr.astype(leaf.dtype),
+                                         leaf.sharding))
+        else:
+            leaves.append(jax.numpy.asarray(arr.astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(flat_t[1], leaves), step
+
+
+def cleanup(directory: str, keep: int = 3):
+    """Delete all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for d in steps[:-keep] if keep else steps:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

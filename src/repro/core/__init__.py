@@ -1,0 +1,15 @@
+"""Core: the paper's chained-MMA arithmetic reduction as a composable
+JAX module, plus its PRAM cost model, precision policy, and the hooks
+that make it a first-class service of the training/serving framework.
+"""
+
+from repro.core.reduction import tc_reduce, tc_reduce_rows  # noqa: F401
+from repro.core.integration import (  # noqa: F401
+    reduce_sum,
+    reduce_mean,
+    masked_mean,
+    squared_sum,
+    global_norm,
+    expert_counts,
+)
+from repro.core import theory, precision  # noqa: F401

@@ -1,0 +1,107 @@
+"""Framework hooks: every arithmetic reduction in the training/serving
+stack routes through the paper's MMA encoding via these helpers.
+
+``method`` selection:
+  'mma'    pure-JAX chained ones-MMA (repro.core.reduction) — safe under
+           pjit/shard_map, lowers to MXU matmuls on TPU.  Default.
+  'pallas' hand-tiled Pallas kernel (repro.kernels) — single-device hot
+           paths; interpret=True on CPU.
+  'vpu'    plain jnp.sum in f32 — the classic-reduction baseline the
+           paper compares against (and the ablation switch).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reduction as R
+
+Method = Literal["mma", "pallas", "vpu"]
+
+
+def _contract_all(a, b) -> jax.Array:
+    """Full contraction <a, b> as one dot_general (f32 accumulation).
+
+    This is the sharding-safe form of the paper's ones-MMA encoding: the
+    reduction is expressed as a matrix-unit contraction instead of a
+    vector-lane sum, *without reshaping* — so under pjit the partitioner
+    lowers it to a local MXU contraction + one psum, no re-layout.
+    """
+    dims = tuple(range(a.ndim))
+    return jax.lax.dot_general(
+        a, b, dimension_numbers=((dims, dims), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def reduce_sum(x, *, method: Method = "mma", chain: int = 4) -> jax.Array:
+    """Sum of all elements, f32 scalar.
+
+    'mma' uses the ones-contraction form (distribution-safe); the
+    explicitly-chained tc_reduce and the Pallas kernel are the
+    paper-structured single-device paths (benchmarks / kernels).
+    """
+    if method == "mma":
+        return _contract_all(x, jnp.ones_like(x))
+    if method == "mma_chained":
+        return R.tc_reduce(x, variant="single_pass", chain=chain)
+    if method == "pallas":
+        from repro.kernels import mma_reduce
+        return mma_reduce(x, variant="single_pass", chain=chain)
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def reduce_mean(x, *, method: Method = "mma") -> jax.Array:
+    return reduce_sum(x, method=method) / x.size
+
+
+def masked_mean(values, mask, *, method: Method = "mma") -> jax.Array:
+    """mean of values where mask==1 — the token-loss reduction.
+
+    In 'mma' form the numerator is a *single* contraction <values, mask>
+    (the mask plays the ones-matrix role), and the denominator is
+    <mask, ones>."""
+    mask = mask.astype(values.dtype)
+    if method == "mma":
+        num = _contract_all(values, mask)
+        den = _contract_all(mask, jnp.ones_like(mask))
+    else:
+        num = reduce_sum(values * mask, method=method)
+        den = reduce_sum(mask, method=method)
+    return num / jnp.maximum(den, 1.0)
+
+
+def squared_sum(x, *, method: Method = "mma") -> jax.Array:
+    """sum(x^2) — grad-norm building block.
+
+    'mma' form: <x, x> as one dot_general — the reduction rides the MXU
+    with x itself standing in for the ones matrix.  'pallas' uses the
+    hand-tiled chained-MMA kernel (kernels.mma_squared_sum)."""
+    if method == "mma":
+        return _contract_all(x, x)
+    if method == "pallas":
+        from repro.kernels import mma_squared_sum
+        return mma_squared_sum(x)
+    xf = x.astype(jnp.float32)
+    return reduce_sum(xf * xf, method=method)
+
+
+def global_norm(tree, *, method: Method = "mma") -> jax.Array:
+    """L2 norm over a pytree (gradient clipping / monitoring)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = functools.reduce(
+        jnp.add, [squared_sum(l, method=method) for l in leaves])
+    return jnp.sqrt(total)
+
+
+def expert_counts(router_probs_onehot, *, method: Method = "mma"):
+    """Tokens-per-expert from a (tokens, experts) one-hot/weight matrix:
+    counts = [1]_{1 x T} x onehot — a single ones-MMA (load-balance loss).
+    """
+    t, e = router_probs_onehot.shape
+    if method == "vpu":
+        return jnp.sum(router_probs_onehot.astype(jnp.float32), axis=0)
+    return R.tc_reduce_rows(router_probs_onehot.T)  # (E,) f32

@@ -1,0 +1,63 @@
+"""Mixed-precision policy + numerical-error measurement (paper §5.4, §6).
+
+GPU tensor cores compute A x B in FP16 with FP32 accumulate; the TPU MXU
+computes bf16 x bf16 with FP32 accumulate.  ``MmaPolicy`` captures that
+choice, and ``percent_error`` reproduces the paper's metric: % error of
+a reduction vs an FP64 CPU oracle, for normal and uniform inputs.
+
+bf16 has FP32's exponent range, so the paper's FP16 *overflow* failures
+(CUB-half / recurrence variant on uniform [0,1]) become *precision*
+degradation here — measured, not assumed (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MmaPolicy:
+    """Dtype policy for MMA-encoded reductions."""
+    input_dtype: jnp.dtype = jnp.bfloat16   # paper: fp16 multiplicands
+    accum_dtype: jnp.dtype = jnp.float32    # paper: fp32 C/D accumulators
+    keep_f32_partials: bool = True          # paper single-pass: True,
+                                            # recurrence: False
+
+    def cast_in(self, x):
+        return x.astype(self.input_dtype)
+
+
+# The paper's two input classes (§5.4): very different error behaviour.
+def normal_input(n: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).normal(0.0, 1.0, size=n)
+
+
+def uniform_input(n: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).uniform(0.0, 1.0, size=n)
+
+
+def fp64_oracle(x: np.ndarray) -> float:
+    """The paper's reference: CPU reduction in double precision."""
+    return float(np.sum(x.astype(np.float64)))
+
+
+def percent_error(measured: float, x: np.ndarray) -> float:
+    """% error vs the FP64 oracle (paper Figs. 7/8 bottom rows)."""
+    ref = fp64_oracle(x)
+    denom = abs(ref) if ref != 0.0 else 1.0
+    return 100.0 * abs(measured - ref) / denom
+
+
+def error_sweep(reduce_fn: Callable[[np.ndarray], float],
+                sizes, dist: str = "normal", seed: int = 0):
+    """Run a reduction over growing n and report (n, %error) pairs."""
+    gen = normal_input if dist == "normal" else uniform_input
+    rows = []
+    for n in sizes:
+        x = gen(int(n), seed=seed)
+        rows.append((int(n), percent_error(reduce_fn(x), x)))
+    return rows

@@ -1,0 +1,147 @@
+"""The paper's contribution as a composable JAX module.
+
+``tc_reduce`` implements the chained-MMA arithmetic reduction of
+Navarro et al. (2020) in pure ``jax.lax`` ops, structured so that every
+partial-summation is an *actual matrix multiply against a ones matrix*
+(``lax.dot_general`` with f32 accumulation), i.e. on TPU it is routed to
+the MXU exactly as the paper routes it to tensor cores.  This module is
+safe under ``jit``/``pjit``/``shard_map`` and is what the framework's
+higher layers (loss, grad-norm, router stats) call on every training
+step; the hand-tiled Pallas version lives in ``repro.kernels``.
+
+Shape convention: the input is flattened, zero-padded to a multiple of
+``chain * m * m`` and viewed as groups of ``chain`` m x m matrices:
+
+    X -> (G, chain, m, m)
+    C_g = sum_r  [1]_{1 x m} x M_{g,r}        (chain of MMAs, f32 accum)
+    s_g = C_g x [1]_{m x 1}                   (final transposed MMA)
+
+followed by variant-specific combining of the per-group scalars s_g.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DEFAULT_M = 128  # MXU tile (the paper's m; m=4 at GPU hw level, 16 in wmma)
+
+Variant = Literal["single_pass", "recurrence", "split"]
+
+
+def _as_groups(x, chain: int, m: int):
+    """Flatten + zero-pad to (G, chain, m, m)."""
+    flat = jnp.ravel(x)
+    n = flat.shape[0]
+    per_group = chain * m * m
+    g = int(math.ceil(max(n, 1) / per_group))
+    padded = g * per_group
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(g, chain, m, m)
+
+
+def _mma_chain(groups, *, accum_dtype=jnp.float32):
+    """C_g = sum_r [1]_{1xm} x M_{g,r}; returns (G, m) f32 row-accumulators.
+
+    The ones-row matmul is expressed as a dot_general so XLA lowers it to
+    the matrix unit; accumulation dtype is pinned to f32 (the paper's
+    FP32 C/D accumulators).
+    """
+    g, chain, m, _ = groups.shape
+    ones_row = jnp.ones((1, m), dtype=groups.dtype)
+    # (1, m) x (G, chain, m, m) -> (G, chain, 1, m): batched ones-MMA.
+    prod = lax.dot_general(
+        ones_row, groups,
+        dimension_numbers=(((1,), (2,)), ((), ())),
+        preferred_element_type=accum_dtype,
+    )  # -> (1, G, chain, m)
+    # The chain accumulation C_r = [1] x M_r + C_{r-1}:
+    return jnp.sum(prod[0], axis=1)  # (G, m) f32
+
+
+def _mma_collapse(acc, *, cast_to=None):
+    """s_g = C_g x [1]_{m x 1} (the final transposed MMA). (G, m) -> (G,)."""
+    m = acc.shape[-1]
+    a = acc if cast_to is None else acc.astype(cast_to)
+    ones_col = jnp.ones((m, 1), dtype=a.dtype)
+    out = lax.dot_general(
+        a, ones_col,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "variant", "chain", "m", "mma_fraction", "keep_f32_partials"))
+def tc_reduce(x, *, variant: Variant = "single_pass", chain: int = 4,
+              m: int = DEFAULT_M, mma_fraction: float = 0.5,
+              keep_f32_partials: bool = True) -> jax.Array:
+    """Arithmetic reduction R(X) via chained ones-MMAs. Returns f32 scalar.
+
+    variant='single_pass' (paper §5.2): one chained-MMA level, per-group
+      scalars combined in f32 (the atomics stage of the paper).  Partials
+      never leave f32 — no overflow/precision cliff.
+    variant='recurrence' (paper §5.1/Alg.1): the per-group scalars are
+      *re-fed as input values* for the next MMA level until one group
+      remains.  With ``keep_f32_partials=False`` the partials are cast
+      back to the input dtype between levels — this reproduces the
+      paper's recurrence-variant pathology (FP16 overflow on GPUs; bf16
+      precision loss here).
+    variant='split' (paper §5.3): fraction ``mma_fraction`` of the data
+      reduced by MMA chains, the rest by a plain VPU sum.
+    """
+    in_dtype = x.dtype
+    if variant == "split":
+        flat = jnp.ravel(x)
+        n = flat.shape[0]
+        n_mma = int(n * mma_fraction)
+        mma_part = tc_reduce(flat[:n_mma], variant="single_pass",
+                             chain=chain, m=m)
+        vpu_part = jnp.sum(flat[n_mma:].astype(jnp.float32))
+        return mma_part + vpu_part
+
+    groups = _as_groups(x, chain, m)
+    acc = _mma_chain(groups)
+    scalars = _mma_collapse(acc)  # (G,) f32
+
+    if variant == "single_pass":
+        # Block results combined on f32 accumulators (atomic-add analogue).
+        return jnp.sum(scalars)
+
+    if variant == "recurrence":
+        # Python loop: G shrinks by chain*m^2 each level; trace-time bound.
+        while scalars.shape[0] > 1:
+            nxt = scalars if keep_f32_partials else scalars.astype(in_dtype)
+            groups = _as_groups(nxt, chain, m)
+            acc = _mma_chain(groups)
+            scalars = _mma_collapse(acc)
+        return scalars[0]
+
+    raise ValueError(f"unknown variant: {variant!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("chain", "m"))
+def tc_reduce_rows(x2d, *, chain: int = 1, m: int = DEFAULT_M) -> jax.Array:
+    """Row-wise MMA reduction: (rows, d) -> (rows,) f32 row sums.
+
+    Used by fused-norm statistics and router load-balance counts — one
+    ones-matmul per d//m column tile, accumulated in f32.
+    """
+    rows, d = x2d.shape
+    pad = (-d) % m
+    if pad:
+        x2d = jnp.pad(x2d, ((0, 0), (0, pad)))
+    ones_col = jnp.ones((x2d.shape[1], 1), dtype=x2d.dtype)
+    out = lax.dot_general(
+        x2d, ones_col,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return out[:, 0]

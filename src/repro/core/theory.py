@@ -1,0 +1,86 @@
+"""PRAM-style cost model from the paper (§4.2, §4.3).
+
+All formulas are the paper's, parameterised by the MMA tile ``m``:
+GPU tensor cores give m=4 (hardware) / m=16 (wmma fragments); the TPU
+MXU gives m=128.  The benchmarks and EXPERIMENTS.md quote these next to
+the measured/HLO-derived numbers.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def t_classic(n: float) -> float:
+    """Classic parallel reduction: T(n) = 4 log2 n (paper Eq. before (17))."""
+    return 4.0 * math.log2(max(n, 2.0))
+
+
+def t_tc(n: float, m: int = 128) -> float:
+    """Two-MMA tensor-core reduction: T_tc(n) = 5 log_{m^2} n (Eq. 16)."""
+    return 5.0 * math.log(max(n, 2.0), m * m)
+
+
+def t_tc_chained(n: float, m: int = 128, chain: int = 1) -> float:
+    """Chained variant: T^R_tc(n) = (2R+3) log_{R m^2} n (Eq. 24)."""
+    base = chain * m * m
+    return (2.0 * chain + 3.0) * math.log(max(n, 2.0), base)
+
+
+def speedup(m: int = 128) -> float:
+    """S = (4/5) log2 m^2 (Eq. 17) — n-independent."""
+    return 0.8 * math.log2(m * m)
+
+
+def speedup_chained(n: float, m: int = 128, chain: int = 1) -> float:
+    """T(n) / T^R_tc(n) for finite n."""
+    return t_classic(n) / t_tc_chained(n, m=m, chain=chain)
+
+
+def optimal_chain(n: float, m: int = 128, max_chain: int = 64) -> int:
+    """argmin_R T^R_tc(n) under the infinite-processor PRAM model.
+
+    The model says R=1 (Eq. 24 grows with R); finite hardware says
+    otherwise (paper found R=4..5 best experimentally) — the benchmark
+    sweep reproduces that tension.
+    """
+    best, best_t = 1, float("inf")
+    for r in range(1, max_chain + 1):
+        t = t_tc_chained(n, m=m, chain=r)
+        if t < best_t:
+            best, best_t = r, t
+    return best
+
+
+@dataclass(frozen=True)
+class OpCount:
+    """Exact operation accounting for one tc_reduce call — used by the
+    benchmarks to report 'work on the matrix unit vs vector unit'."""
+    mma_ops: int          # number of m x m ones-MMAs issued
+    mxu_flops: int        # 2*m^3 per MMA (what the matrix unit executes)
+    useful_flops: int     # n-1 adds actually required by the reduction
+    vpu_flops: int        # scalar/vector adds outside the MMAs
+
+
+def op_count(n: int, m: int = 128, chain: int = 4,
+             variant: str = "single_pass") -> OpCount:
+    """Count MMAs like the paper counts them: R+1 MMAs per R m^2 numbers,
+    then the variant-specific combine."""
+    per_group = chain * m * m
+    groups = max(1, math.ceil(n / per_group))
+    mma = groups * (chain + 1)
+    vpu = 0
+    if variant == "single_pass":
+        vpu = groups  # f32 adds of per-group scalars (atomics analogue)
+    elif variant == "recurrence":
+        g = groups
+        while g > 1:
+            g = max(1, math.ceil(g / per_group))
+            mma += g * (chain + 1)
+    return OpCount(
+        mma_ops=mma,
+        mxu_flops=mma * 2 * m * m * m,
+        useful_flops=max(n - 1, 0),
+        vpu_flops=vpu,
+    )

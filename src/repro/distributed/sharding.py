@@ -1,0 +1,149 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes
+("embed", "heads", "experts", ...) onto physical mesh axes
+("pod", "data", "model"), with automatic divisibility fallback.
+
+Models annotate every parameter and key activation with logical axes;
+this module turns those into NamedShardings / with_sharding_constraints.
+A context variable carries (mesh, rules) so model code stays mesh-agnostic
+and single-device tests run with the constraints compiled away.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules: logical axis -> preference-ordered candidate mesh axes.
+# First candidate that (a) exists in the mesh and (b) divides the dim wins.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),       # DP across pods, then data
+    "seq": (),                      # replicated (sequence-parallel opt-in)
+    "seq_sp": ("data",),            # sequence-parallel variant
+    "seq_mp": ("model",),           # attention seq-sharding over 'model'
+    #                                 (archs whose head count can't TP)
+    # params
+    "vocab": ("model",),
+    "embed": ("data",),             # FSDP shard of the embed dim
+    "embed_no_fsdp": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    # MoE layout: EP over 'data', expert-tensor-parallel over 'model'
+    # (tokens are model-replicated, so the ffn-shard psum is legal); see
+    # models/moe.py.
+    "experts": ("data",),
+    "expert_mlp": ("model",),
+    "experts_2d": ("data", "model"),  # layout A: 1 expert (group)/device
+    "q_lora": ("model",),
+    "kv_lora": (),
+    "lru": ("model",),
+    "layers": (),
+    "conv": (),
+    "stats": (),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, tuple[str, ...]] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Install (mesh, rules) for model code executed inside."""
+    old_mesh, old_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old_mesh, old_rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[dict] = None) -> P:
+    """PartitionSpec for a concrete shape given logical axis names.
+
+    A mesh axis is only used once per spec (XLA requirement) and only when
+    it divides the dimension; multi-candidate rules take every candidate
+    that fits (e.g. batch -> ('pod','data'))."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            parts.append(None)
+            continue
+        cands = rules.get(name, ())
+        chosen: list[str] = []
+        remaining = dim
+        for ax in cands:
+            if ax in used or ax not in mesh.shape:
+                continue
+            sz = mesh.shape[ax]
+            if remaining % sz == 0:
+                chosen.append(ax)
+                used.add(ax)
+                remaining //= sz
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    return P(*parts)
+
+
+def sharding_for(shape, logical_axes, mesh=None, rules=None):
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(shape, logical_axes, mesh, rules))
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(shape_tree, axes_tree, mesh=None, rules=None):
+    """Map (pytree of ShapeDtypeStruct/arrays, pytree of axis tuples) ->
+    pytree of NamedShardings (or None when no mesh)."""
+    mesh = mesh or _CTX.mesh
+
+    def one(leaf, axes):
+        return sharding_for(leaf.shape, axes, mesh, rules)
+
+    return jax.tree_util.tree_map(one, shape_tree, axes_tree,
+                                  is_leaf=lambda l: l is None)
+
+
+def data_axis_names(mesh: Optional[Mesh] = None) -> tuple[str, ...]:
+    """Mesh axes that carry the batch (for psum of grads/metrics)."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

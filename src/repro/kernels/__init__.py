@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the MMA-reduction framework.
+
+Each kernel module contains the raw pl.pallas_call + BlockSpec code;
+``ops`` exposes the jit'd public API; ``ref`` holds pure-jnp oracles.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    mma_reduce,
+    mma_reduce_partials,
+    mma_rmsnorm,
+    mma_squared_sum,
+    MXU_M,
+)

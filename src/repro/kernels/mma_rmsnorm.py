@@ -1,0 +1,57 @@
+"""Fused RMSNorm whose row statistics are computed as ones-MMAs (Pallas/TPU).
+
+The row-wise mean-of-squares of RMSNorm,
+
+    ms_i = (1/d) * sum_j x_ij^2,
+
+is itself an arithmetic reduction, so the paper's encoding applies: per
+row-tile we compute ``(x * x) @ [1]_{d x 1}`` — one MXU ones-matmul per
+tile — instead of a VPU lane reduction.  Normalisation and the weight
+multiply are fused into the same VMEM-resident pass, so x is read from
+HBM exactly once.
+
+Supports the Gemma-style ``(1 + w)`` scaling via ``weight_offset``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def mma_rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float,
+                       weight_offset: float):
+    x = x_ref[...].astype(jnp.float32)
+    d = x.shape[-1]
+    ones_col = jnp.ones((d, 1), dtype=jnp.float32)
+    # MMA row reduction: (rows, d) x (d, 1) -> (rows, 1) mean of squares.
+    ms = jnp.dot(x * x, ones_col,
+                 preferred_element_type=jnp.float32) / float(d)
+    rstd = jax.lax.rsqrt(ms + eps)
+    w = w_ref[...].astype(jnp.float32) + weight_offset
+    o_ref[...] = (x * rstd * w).astype(o_ref.dtype)
+
+
+def rmsnorm_call(x2d, weight, *, eps: float = 1e-6,
+                 weight_offset: float = 0.0, block_rows: int = 64,
+                 interpret: bool = False):
+    """x2d: (rows, d), weight: (d,). rows must divide by block_rows."""
+    rows, d = x2d.shape
+    grid = rows // block_rows
+    assert grid * block_rows == rows, (rows, block_rows)
+    kernel = functools.partial(mma_rmsnorm_kernel, eps=eps,
+                               weight_offset=weight_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x2d.dtype),
+        interpret=interpret,
+    )(x2d, weight.reshape(1, d))

@@ -1,0 +1,130 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These handle flattening, zero-padding to tile boundaries, variant
+dispatch, and interpret-mode selection (the kernels execute in
+interpret=True on CPU so the whole suite validates without a TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import mma_reduce as _mr
+from repro.kernels import mma_rmsnorm as _rn
+
+MXU_M = _mr.MXU_M
+
+
+def _should_interpret(interpret):
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(x, tile_rows: int, m: int):
+    """Flatten x, zero-pad to a multiple of tile_rows*m, view as (T, m)."""
+    flat = jnp.ravel(x)
+    n = flat.shape[0]
+    per_tile = tile_rows * m
+    padded = int(math.ceil(max(n, 1) / per_tile)) * per_tile
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(padded // m, m)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "variant", "chain", "block_rows", "m", "mma_fraction", "interpret"))
+def mma_reduce(x, *, variant: str = "single_pass", chain: int = 4,
+               block_rows: int = 128, m: int = MXU_M,
+               mma_fraction: float = 0.5, interpret=None) -> jax.Array:
+    """Sum all elements of ``x`` via chained ones-MMAs. Returns f32 scalar.
+
+    variant:
+      'single_pass'  one kernel pass, sequential-grid f32 VMEM accumulator
+                     (paper §5.2 — the paper's chosen variant).
+      'recurrence'   multi-pass: each pass maps n -> n/(chain*block_rows*m)
+                     partials until one tile remains (paper §5.1 / Alg. 1).
+      'split'        fraction ``mma_fraction`` of every tile on the MXU,
+                     remainder on the VPU (paper §5.3).
+    """
+    itp = _should_interpret(interpret)
+    if variant == "single_pass":
+        x2d = _to_tiles(x, chain * block_rows, m)
+        out = _mr.single_pass_call(x2d, chain=chain, block_rows=block_rows,
+                                   interpret=itp)
+        return out[0, 0]
+    if variant == "recurrence":
+        x2d = _to_tiles(x, chain * block_rows, m)
+        # Algorithm 1: keep applying KernelMMA until one tile remains.
+        while x2d.shape[0] > chain * block_rows:
+            parts = _mr.partials_call(x2d, chain=chain,
+                                      block_rows=block_rows, interpret=itp)
+            x2d = _to_tiles(parts, chain * block_rows, m)
+        out = _mr.single_pass_call(x2d, chain=chain, block_rows=block_rows,
+                                   interpret=itp)
+        return out[0, 0]
+    if variant == "split":
+        x2d = _to_tiles(x, block_rows, m)
+        out = _mr.split_call(x2d, block_rows=block_rows,
+                             mma_fraction=mma_fraction, interpret=itp)
+        return out[0, 0]
+    raise ValueError(f"unknown variant: {variant!r}")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chain", "block_rows", "m", "interpret"))
+def mma_squared_sum(x, *, chain: int = 4, block_rows: int = 128,
+                    m: int = MXU_M, interpret=None) -> jax.Array:
+    """sum(x^2) via chained ones-MMAs (gradient-norm hot-spot): squares
+    on the VPU, row-reduction on the MXU, f32 partials throughout."""
+    itp = _should_interpret(interpret)
+    x2d = _to_tiles(x, chain * block_rows, m)
+    out = _mr.single_pass_call(x2d, chain=chain, block_rows=block_rows,
+                               interpret=itp, square=True)
+    return out[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chain", "block_rows", "m", "interpret"))
+def mma_reduce_partials(x, *, chain: int = 4, block_rows: int = 128,
+                        m: int = MXU_M, interpret=None) -> jax.Array:
+    """One recurrence level: per-tile f32 partial sums, shape (G,)."""
+    itp = _should_interpret(interpret)
+    x2d = _to_tiles(x, chain * block_rows, m)
+    parts = _mr.partials_call(x2d, chain=chain, block_rows=block_rows,
+                              interpret=itp)
+    return parts[:, 0]
+
+
+def _pick_block_rows(rows: int, d: int, vmem_budget: int = 8 * 2**20):
+    """Largest power-of-two row tile whose f32 working set fits VMEM."""
+    bm = 128
+    while bm > 8 and (3 * bm * d * 4) > vmem_budget:
+        bm //= 2
+    while bm > 1 and rows % bm:
+        bm //= 2
+    return max(bm, 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "weight_offset", "interpret"))
+def mma_rmsnorm(x, weight, *, eps: float = 1e-6,
+                weight_offset: float = 0.0, interpret=None) -> jax.Array:
+    """Fused RMSNorm over the last dim of x (any leading dims)."""
+    itp = _should_interpret(interpret)
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = int(math.prod(lead)) if lead else 1
+    x2d = x.reshape(rows, d)
+    bm = _pick_block_rows(rows, d)
+    pad_rows = int(math.ceil(rows / bm)) * bm
+    if pad_rows != rows:
+        x2d = jnp.pad(x2d, ((0, pad_rows - rows), (0, 0)))
+    out = _rn.rmsnorm_call(x2d, weight, eps=eps,
+                           weight_offset=weight_offset, block_rows=bm,
+                           interpret=itp)
+    return out[:rows].reshape(*lead, d)

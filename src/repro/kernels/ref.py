@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ref mirrors the *semantics* the kernel is supposed to have (including
+accumulation dtype), not its implementation.  Tests assert_allclose the
+kernels (interpret=True on CPU) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reduce_ref(x) -> jax.Array:
+    """f32-accumulated sum of all elements (any shape, any float dtype)."""
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def partials_ref(x2d, *, chain: int, block_rows: int) -> jax.Array:
+    """Per-tile f32 partial sums for the recurrence variant.
+
+    x2d: (G*chain*block_rows, m) -> (G, 1) f32.
+    """
+    rows, m = x2d.shape
+    tile = chain * block_rows
+    g = rows // tile
+    return jnp.sum(x2d.astype(jnp.float32).reshape(g, tile * m),
+                   axis=1, keepdims=True)
+
+
+def squared_sum_ref(x) -> jax.Array:
+    """f32-accumulated sum of squares (grad-norm building block)."""
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf)
+
+
+def rmsnorm_ref(x2d, weight, *, eps: float = 1e-6,
+                weight_offset: float = 0.0) -> jax.Array:
+    xf = x2d.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(ms + eps)
+    w = weight.astype(jnp.float32) + weight_offset
+    return (xf * rstd * w).astype(x2d.dtype)

@@ -1,0 +1,438 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# initialisation.  This module is the only place the 512 placeholder
+# devices exist — tests/benches see the real single CPU device.
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh)
+cell on the production meshes, record memory/cost analysis and the
+collective schedule, and run the FLOP-accounting compiles that
+reconstruct full-depth HLO costs (XLA's HloCostAnalysis counts
+while-loop bodies once, so scanned layer stacks must be accounted by
+per-layer-kind microcost compiles; see EXPERIMENTS.md §Dry-run).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k \
+      --mesh pod --out-dir experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, TrainConfig
+from repro.distributed import sharding as shd
+from repro.launch import train as trainlib
+from repro.models import model_zoo
+from repro.models import transformer as T
+from repro.models.param import axes_tree, shapes_tree
+
+# Per-arch baseline knobs for the *real* train compile (memory-feasible
+# gradient accumulation).  These are baseline choices, not tuning.
+TRAIN_MICROBATCHES = {
+    "deepseek-v3-671b": 8,
+    "arctic-480b": 4,
+    "mistral-large-123b": 4,
+    "llama-3.2-vision-90b": 4,
+    "gemma3-27b": 2,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+
+# ------------------------------------------------------------ HLO parse
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shape>\([^=]*?\)|"
+    r"[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*(?P<op>[\w\-]+)\("
+    r"(?P<args>.*)$")
+_GROUPSZ_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPSZ2_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# Ops whose bytes are structural (must move through HBM even on TPU,
+# where elementwise chains fuse into their producers).  Used for the
+# fusion-insensitive memory metric (see EXPERIMENTS.md §Roofline).
+STRUCTURAL_OPS = ("dot", "convolution", "scatter", "gather",
+                  "dynamic-slice", "dynamic-update-slice",
+                  "all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute", "sort")
+
+
+def parse_structural_bytes(hlo_text: str) -> int:
+    """Sum operand+result bytes of structural ops in the ENTRY
+    computation (+ fusion nodes' external operands are already what the
+    entry references).  Elementwise/convert/broadcast are excluded — on
+    TPU they fuse; XLA-CPU's 'bytes accessed' counts them heavily."""
+    entry = hlo_text.split("ENTRY", 1)
+    text = entry[1] if len(entry) == 2 else hlo_text
+    defs: dict[str, int] = {}
+    total = 0
+    for line in text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name = m.group("name")
+        nbytes = _shape_bytes(m.group("shape"))
+        defs[name] = nbytes
+        op = m.group("op")
+        if any(op == s or op == s + "-start" for s in STRUCTURAL_OPS) \
+                or op == "fusion" and (".dot." in line
+                                       or "kind=kOutput" in line):
+            arg_names = re.findall(r"%?([\w.\-]+)",
+                                   m.group("args").split(")")[0])
+            total += nbytes + sum(defs.get(a, 0) for a in arg_names
+                                  if a in defs)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective bytes by op type from post-SPMD HLO."""
+    defs: dict[str, int] = {}
+    instrs = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name = m.group("name")
+        defs[name] = _shape_bytes(m.group("shape"))
+        instrs.append((name, m.group("op"), m.group("args"), line))
+    out: dict[str, dict] = {}
+    for name, op, args, line in instrs:
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # operand bytes (resolve references; fallback to result bytes)
+        arg_names = re.findall(r"%?([\w.\-]+)", args.split(")")[0])
+        obytes = sum(defs.get(a, 0) for a in arg_names if a in defs)
+        if obytes == 0:
+            obytes = defs.get(name, 0)
+        gs = None
+        mg = _GROUPSZ_RE.search(line)
+        if mg:
+            gs = int(mg.group(2))
+        else:
+            mg2 = _GROUPSZ2_RE.search(line)
+            if mg2:
+                gs = len(mg2.group(1).split(","))
+        rec = out.setdefault(base, {"count": 0, "bytes": 0,
+                                    "group_sizes": {}})
+        rec["count"] += 1
+        rec["bytes"] += obytes
+        if gs:
+            key = str(gs)
+            rec["group_sizes"][key] = rec["group_sizes"].get(key, 0) \
+                + obytes
+    return out
+
+
+# ------------------------------------------------------------ meshes
+
+
+def production_mesh(kind: str):
+    from jax.sharding import Mesh
+    if kind == "multipod":
+        shape, axes = (2, 16, 16), ("pod", "data", "model")
+    else:
+        shape, axes = (16, 16), ("data", "model")
+    n = math.prod(shape)
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+# ------------------------------------------------------------ lowering
+
+
+def _cell_step(cfg, shape_cfg, mesh, *, microbatches=1):
+    """Build (jitted_fn, arg_sds) for one cell."""
+    model = model_zoo.build(cfg)
+    if shape_cfg.kind == "train":
+        tconf = TrainConfig(microbatches=microbatches)
+        step, make_init, s_shard, b_shard = trainlib.jit_train_step(
+            model, tconf, mesh, model.input_specs(shape_cfg))
+        state_sds = jax.eval_shape(make_init, jax.random.PRNGKey(0))
+        return step, (state_sds, model.input_specs(shape_cfg))
+
+    # serving: params in compute dtype (bf16), sharded per logical rules
+    p_shapes = shapes_tree(model.specs)
+    p_sds = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cfg.compute_dtype),
+        p_shapes)
+    p_axes = axes_tree(model.specs)
+    p_shard = shd.tree_shardings(p_sds, p_axes, mesh)
+    batch_sds = model.input_specs(shape_cfg)
+
+    if shape_cfg.kind == "prefill":
+        def prefill(params, batch):
+            with shd.axis_rules(mesh):
+                return model.prefill(params, batch)
+        b_axes = trainlib.batch_axes(batch_sds)
+        b_shard = {k: shd.sharding_for(v.shape, b_axes[k], mesh)
+                   for k, v in batch_sds.items()}
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        return fn, (p_sds, batch_sds)
+
+    # decode
+    caches_sds = batch_sds["caches"]
+    c_axes = T.cache_logical_axes(caches_sds)
+    c_shard = shd.tree_shardings(caches_sds, c_axes, mesh)
+    b_shard = {
+        "token": shd.sharding_for(batch_sds["token"].shape,
+                                  ("batch", None), mesh),
+        "pos": shd.sharding_for((), (), mesh),
+        "caches": c_shard,
+    }
+
+    def decode(params, batch):
+        with shd.axis_rules(mesh):
+            return model.decode_step(params, batch)
+
+    fn = jax.jit(decode, in_shardings=(p_shard, b_shard),
+                 donate_argnums=(1,))
+    return fn, (p_sds, batch_sds)
+
+
+def compile_cell(cfg, shape_cfg, mesh, *, microbatches=1,
+                 want_hlo=True):
+    """lower + compile one cell; returns result dict (+ hlo text)."""
+    t0 = time.time()
+    fn, args = _cell_step(cfg, shape_cfg, mesh, microbatches=microbatches)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    res = {"lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1)}
+    try:
+        ca = compiled.cost_analysis()
+        res["cost_analysis"] = {
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+            "transcendentals": float(ca.get("transcendentals", -1)),
+        }
+    except Exception as e:  # pragma: no cover
+        res["cost_analysis"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        res["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        res["memory_analysis"] = {"error": str(e)}
+    if want_hlo:
+        try:
+            txt = compiled.as_text()
+            res["collectives"] = parse_collectives(txt)
+            res["structural_bytes"] = parse_structural_bytes(txt)
+        except Exception as e:  # pragma: no cover
+            res["collectives"] = {"error": str(e)}
+    return res
+
+
+# --------------------------------------------------- FLOP accounting
+
+
+def _distinct_kinds(cfg):
+    """Distinct (layer-kind, mlp-kind) pairs with their counts."""
+    descs = T.layer_descs(cfg)
+    counts: dict[tuple, int] = {}
+    for d in descs:
+        counts[(d.kind, d.mlp)] = counts.get((d.kind, d.mlp), 0) + 1
+    return counts
+
+
+def _microcost_cfg(cfg, kind_mlp, n_layers, shape_cfg):
+    """Config with n_layers of exactly one (kind, mlp), unrolled, direct
+    attention (no inner scans -> exact HloCostAnalysis)."""
+    kind, mlp = kind_mlp
+    moe = cfg.moe
+    if moe is not None:
+        first_dense = 0 if mlp == "moe" else n_layers
+        moe = dataclasses.replace(moe, first_dense_layers=first_dense)
+    seq = shape_cfg.seq_len
+    return dataclasses.replace(
+        cfg, num_layers=n_layers, pattern=(kind,), moe=moe,
+        scan_layers=False, attn_chunk=max(seq, cfg.attn_chunk),
+        encoder_layers=min(cfg.encoder_layers, 1))
+
+
+def accounting(cfg, shape_cfg, mesh) -> dict:
+    """Reconstruct full-depth per-device flops / bytes / collective bytes
+    from per-layer-kind microcost compiles (linear in layer counts)."""
+    counts = _distinct_kinds(cfg)
+    seq_scale = 1.0
+    sc = shape_cfg
+    if cfg.rwkv is not None and shape_cfg.kind != "decode" \
+            and shape_cfg.seq_len > 64:
+        # rwkv time recurrence must be unrolled to be counted: account at
+        # seq 64 and scale linearly (all rwkv costs are linear in S).
+        seq_scale = shape_cfg.seq_len / 64
+        sc = dataclasses.replace(shape_cfg, seq_len=64)
+
+    def costs_of(c):
+        r = compile_cell(c, sc, mesh, microbatches=1, want_hlo=True)
+        coll = sum(v["bytes"] for v in r.get("collectives", {}).values()
+                   if isinstance(v, dict))
+        ca = r["cost_analysis"]
+        return np.array([ca.get("flops", 0.0),
+                         ca.get("bytes_accessed", 0.0),
+                         float(coll),
+                         float(r.get("structural_bytes", 0))])
+
+    kinds = list(counts)
+    f1 = {}
+    for km in kinds:
+        f1[km] = costs_of(_microcost_cfg(cfg, km, 1, sc))
+    f2_first = costs_of(_microcost_cfg(cfg, kinds[0], 2, sc))
+    g = {kinds[0]: f2_first - f1[kinds[0]]}
+    base = f1[kinds[0]] - g[kinds[0]]
+    for km in kinds[1:]:
+        g[km] = f1[km] - base
+    total = base.copy()
+    for km, n in counts.items():
+        total = total + n * g[km]
+    if cfg.encoder_layers > 1:
+        # encoder layers: one extra microcost on the encoder depth
+        c1 = _microcost_cfg(cfg, kinds[0], 1, sc)
+        c2 = dataclasses.replace(c1, encoder_layers=2 if
+                                 cfg.encoder_layers >= 2 else 1)
+        g_enc = costs_of(c2) - f1[kinds[0]]
+        total = total + (cfg.encoder_layers - 1) * g_enc
+    total = total * seq_scale
+    return {
+        "flops_per_device": float(total[0]),
+        "bytes_per_device": float(total[1]),
+        "collective_bytes_per_device": float(total[2]),
+        "structural_bytes_per_device": float(total[3]),
+        "seq_scale": seq_scale,
+        "per_kind_flops": {f"{k[0]}/{k[1]}": float(v[0])
+                           for k, v in g.items()},
+        "per_kind_structural_bytes": {f"{k[0]}/{k[1]}": float(v[3])
+                                      for k, v in g.items()},
+        "base_flops": float(base[0]),
+    }
+
+
+# ------------------------------------------------------------ driver
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, with_accounting: bool = True, force: bool = False,
+             overrides: dict | None = None, tag: str = ""):
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    if os.path.exists(path) and not force:
+        print(f"[skip existing] {path}")
+        return json.load(open(path))
+    runnable, reason = registry.cell_is_runnable(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "runnable": runnable}
+    if tag:
+        rec["tag"] = tag
+        rec["overrides"] = overrides
+    if not runnable:
+        rec["skip_reason"] = reason
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skipped] {arch} x {shape_name}: {reason}")
+        return rec
+
+    cfg = registry.get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape_cfg = SHAPES[shape_name]
+    mesh = production_mesh(mesh_kind)
+    mb = TRAIN_MICROBATCHES.get(arch, 1) if shape_cfg.kind == "train" \
+        else 1
+    t0 = time.time()
+    try:
+        rec.update(compile_cell(cfg, shape_cfg, mesh, microbatches=mb))
+        rec["microbatches"] = mb
+        rec["ok"] = True
+        model = model_zoo.build(cfg)
+        rec["num_params"] = model.num_params()
+        if with_accounting and mesh_kind == "pod":
+            rec["accounting"] = accounting(cfg, shape_cfg, mesh)
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    json.dump(rec, open(path, "w"), indent=1)
+    status = "OK" if rec.get("ok") else "FAIL"
+    print(f"[{status}] {arch} x {shape_name} x {mesh_kind} "
+          f"({rec['total_s']}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--no-accounting", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ModelConfig fields (perf knobs)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output file (perf variants)")
+    args = ap.parse_args()
+
+    archs = registry.list_archs() if args.all or not args.arch \
+        else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    ov = json.loads(args.overrides) if args.overrides else None
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                run_cell(arch, shape, mk, args.out_dir,
+                         with_accounting=not args.no_accounting,
+                         force=args.force, overrides=ov, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Batched serving: prefill + decode loop with KV caches.
+
+``Server`` packages jitted prefill/decode for a fixed batch geometry
+(the production pattern: a fleet of fixed-shape servers + a router).
+Greedy or temperature sampling; per-slot stop handling so a batch of
+heterogeneous requests drains correctly (continuous-batching-lite).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.models import model_zoo
+
+
+@dataclasses.dataclass
+class Server:
+    model: object
+    mesh: Optional[object] = None
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        m = self.model
+
+        def prefill(params, batch):
+            with shd.axis_rules(self.mesh):
+                return m.prefill(params, batch)
+
+        def decode(params, batch):
+            with shd.axis_rules(self.mesh):
+                return m.decode_step(params, batch)
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=())
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits[:, -1, :] / self.temperature).astype(jnp.int32)
+
+    def generate(self, params, prompts: np.ndarray, *, max_new: int = 32,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 extras: Optional[dict] = None):
+        """prompts: (B, S) int32. Returns (B, <=max_new) generated ids."""
+        b, s = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extras:
+            batch.update(extras)
+        key = jax.random.PRNGKey(seed)
+        logits, caches = self._prefill(params, batch)
+        out = []
+        done = np.zeros((b,), bool)
+        key, k0 = jax.random.split(key)
+        tok = self._sample(logits, k0)
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            if eos_id is not None:
+                done |= np.asarray(tok) == eos_id
+                if done.all():
+                    break
+            step_batch = {"token": tok[:, None],
+                          "pos": jnp.asarray(s + i, jnp.int32),
+                          "caches": caches}
+            logits, caches = self._decode(params, step_batch)
+            key, ki = jax.random.split(key)
+            tok = self._sample(logits, ki)
+        return np.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    cfg = registry.get_config(args.arch, smoke=not args.full)
+    model = model_zoo.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    extras = {}
+    if cfg.vision_tokens:
+        extras["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.vision_tokens,
+                                 cfg.d_model)), jnp.bfloat16)
+    if cfg.is_encdec:
+        extras["src_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, args.prompt_len,
+                                 cfg.d_model)), jnp.bfloat16)
+    srv = Server(model)
+    t0 = time.time()
+    toks = srv.generate(params, prompts, max_new=args.max_new,
+                        extras=extras)
+    dt = time.time() - t0
+    print(f"generated {toks.shape} in {dt:.2f}s "
+          f"({toks.size / dt:.1f} tok/s)")
+    print(toks[:2])
+
+
+if __name__ == "__main__":
+    main()

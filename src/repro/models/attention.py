@@ -1,0 +1,295 @@
+"""Attention: GQA/MHA with RoPE, QK-norm, soft-capping, sliding-window
+(local) masking, cross-attention, KV caches, and a KV-chunked
+online-softmax (flash-style) path for long sequences.
+
+Layouts: q (B, S, H, hd); k/v (B, S, KV, hd); caches are fixed-capacity
+ring-less buffers written at position ``idx`` (decode writes one step).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.param import Param
+
+NEG_INF = -2.0e38
+
+
+def attn_specs(cfg, *, kv_input_dim: Optional[int] = None):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kv_in = kv_input_dim or d
+    specs = {
+        "wq": Param((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": Param((kv_in, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Param((kv_in, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Param((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = Param((H, hd), ("heads", "head_dim"), "zeros")
+        specs["bk"] = Param((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = Param((KV, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.use_qk_norm:
+        specs["q_norm"] = Param((hd,), ("head_dim",), "zeros")
+        specs["k_norm"] = Param((hd,), ("head_dim",), "zeros")
+    return specs
+
+
+def _head_rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def make_cache(cfg, batch: int, capacity: int, *, kv_input_dim=None,
+               dtype=jnp.bfloat16):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, KV, hd), dtype),
+        "v": jnp.zeros((batch, capacity, KV, hd), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes():
+    return {"k": ("batch", None, "kv_heads", "head_dim"),
+            "v": ("batch", None, "kv_heads", "head_dim"),
+            "idx": ()}
+
+
+def _mask(qpos, kpos, *, causal: bool, window: Optional[int],
+          kv_len=None):
+    """(..., Sq, C) boolean validity mask from position vectors."""
+    m = jnp.ones((qpos.shape[-1], kpos.shape[-1]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    if kv_len is not None:
+        m &= (kpos < kv_len)[None, :]
+    return m
+
+
+def _direct_attn(qg, k, v, *, qpos, kpos, causal, window, kv_len,
+                 scale, cap):
+    """Unchunked attention: qg (B,Sq,KV,G,hd), k/v (B,Sk,KV,hd)."""
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = L.softcap(s, cap)
+    m = _mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(v.dtype)
+
+
+def _chunked_attn(qg, k, v, *, qpos, causal, window, scale, cap,
+                  chunk: int):
+    """Online-softmax over KV chunks (flash-style, jax.lax.scan)."""
+    B, Sq, KV, G, hd = qg.shape
+    hd_v = v.shape[-1]          # may differ from hd (MLA: 192 vs 128)
+    Sk = k.shape[1]
+    nck = math.ceil(Sk / chunk)
+    pad = nck * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos = jnp.arange(nck * chunk, dtype=jnp.int32)
+    kc = k.reshape(B, nck, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nck, chunk, KV, hd_v).transpose(1, 0, 2, 3, 4)
+    kp = kpos.reshape(nck, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, kp_i = xs
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k_i,
+                       preferred_element_type=jnp.float32) * scale
+        s = L.softcap(s, cap)
+        valid = _mask(qpos, kp_i, causal=causal, window=window, kv_len=Sk)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckh->bkgqh", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kp))
+    o = acc / jnp.maximum(l[..., None], 1e-37)
+    return o.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # (B,Sq,KV,G,hd)
+
+
+def _banded_local_attn(qg, k, v, *, window: int, scale, cap):
+    """Exact sliding-window attention computing only the block-diagonal
+    band (q block i attends kv blocks i-1, i with w == window), instead
+    of all S x S scores + mask.  FLOPs/bytes: O(S * 2w) vs O(S^2) —
+    the §Perf 'local dead-work' fix; bitwise-equal to the masked form.
+
+    Requires Sq == Sk divisible by window (callers pad)."""
+    B, S, KV, G, hd = qg.shape
+    hd_v = v.shape[-1]
+    w = window
+    nb = S // w
+    qb = qg.reshape(B, nb, w, KV, G, hd)
+    kb = k.reshape(B, nb, w, KV, hd)
+    vb = v.reshape(B, nb, w, KV, hd_v)
+    # kv pair for block i = [block i-1 ; block i]
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kprev, kb], axis=2)          # (B, nb, 2w, KV, hd)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    s = jnp.einsum("bnqkgh,bnckh->bkgnqc", qb, k2,
+                   preferred_element_type=jnp.float32) * scale
+    s = L.softcap(s, cap)
+    # positions within the band: query t_q (0..w), key c (0..2w) offset -w
+    tq = jnp.arange(w)[:, None]
+    tc = jnp.arange(2 * w)[None, :] - w
+    valid = (tc <= tq) & (tc > tq - w)      # causal + window
+    # block 0 has no predecessor: mask the phantom prefix keys
+    first = (jnp.arange(nb) == 0)[:, None, None]
+    in_prev = (tc < 0)[None]
+    valid = valid[None] & ~(first & in_prev)           # (nb, w, 2w)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgnqc,bnckh->bnqkgh", p.astype(v2.dtype), v2,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, KV, G, hd_v).astype(v.dtype)
+
+
+def attention(params, cfg, x, *, positions, kind: str = "global",
+              cache=None, memory=None, causal: bool = True,
+              decode: bool = False):
+    """Self- or cross-attention.
+
+    positions: (Sq,) int32 absolute positions of the query tokens (decode
+    passes the single current index).  Returns (out, new_cache).
+    """
+    dt = x.dtype
+    B, Sq, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    window = cfg.window if kind == "local" else None
+    theta = cfg.rope_theta
+    if kind == "local" and cfg.rope_theta_local is not None:
+        theta = cfg.rope_theta_local
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+    if cfg.use_qk_norm:
+        q = _head_rmsnorm(q, params["q_norm"])
+    pos_b = jnp.broadcast_to(positions[None, :], (B, Sq))
+    if kind != "cross":
+        q = L.apply_rope(q, pos_b, theta=theta, fraction=cfg.rope_fraction)
+    if getattr(cfg, "attn_seq_shard", False) and not decode \
+            and kind != "cross":
+        # Sequence-sharded attention: when heads % model-parallelism != 0
+        # (arctic: 56 heads on a 16-way axis) head-TP is impossible and
+        # attention would replicate 16x; shard the query sequence over
+        # 'model' instead (KV stays replicated — scores partition on Sq).
+        q = constrain(q, ("batch", "seq_mp", "heads", "head_dim"))
+    else:
+        q = constrain(q, ("batch", None, "heads", "head_dim"))
+
+    new_cache = cache
+    if kind == "cross":
+        # keys/values from encoder/vision memory; cached once at prefill.
+        if cache is not None and "k" in cache and decode:
+            k, v = cache["k"], cache["v"]
+        else:
+            src = memory.astype(dt)
+            k = jnp.einsum("bmd,dhk->bmhk", src, params["wk"].astype(dt))
+            v = jnp.einsum("bmd,dhk->bmhk", src, params["wv"].astype(dt))
+            if cfg.qkv_bias:
+                k = k + params["bk"].astype(dt)
+                v = v + params["bv"].astype(dt)
+            if cfg.use_qk_norm:
+                k = _head_rmsnorm(k, params["k_norm"])
+            if cache is not None:
+                new_cache = dict(cache, k=k, v=v)
+        kv_len, causal, window = k.shape[1], False, None
+        kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k = k + params["bk"].astype(dt)
+            v = v + params["bv"].astype(dt)
+        if cfg.use_qk_norm:
+            k = _head_rmsnorm(k, params["k_norm"])
+        k = L.apply_rope(k, pos_b, theta=theta, fraction=cfg.rope_fraction)
+        if cache is not None:
+            idx = cache["idx"]
+            cap = cache["k"].shape[1]
+            # Ring-buffer invariant: token t lives at slot t % cap.  Local
+            # layers allocate cap == window, so the ring itself enforces
+            # the sliding window during decode (no positional mask).
+            if decode:
+                widx = jax.lax.rem(idx, jnp.int32(cap))
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, widx, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, widx, 0, 0))
+                new_cache = dict(cache, k=ck, v=cv, idx=idx + Sq)
+                k, v = ck, cv
+                kv_len = jnp.minimum(idx + Sq, cap)  # valid slot count
+                causal, window = False, None         # ring handles both
+                kpos = jnp.arange(cap, dtype=jnp.int32)
+            else:  # prefill from position 0
+                if Sq >= cap:
+                    tail_k = k[:, Sq - cap:].astype(cache["k"].dtype)
+                    tail_v = v[:, Sq - cap:].astype(cache["v"].dtype)
+                    ck = jnp.roll(tail_k, Sq % cap, axis=1)
+                    cv = jnp.roll(tail_v, Sq % cap, axis=1)
+                else:
+                    ck = jax.lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype),
+                        (0, 0, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype),
+                        (0, 0, 0, 0))
+                new_cache = dict(cache, k=ck, v=cv, idx=idx + Sq)
+                kv_len = None
+                kpos = jnp.arange(Sq, dtype=jnp.int32)
+        else:
+            kv_len = None
+            kpos = jnp.arange(Sq, dtype=jnp.int32)
+
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    banded = (kind == "local" and getattr(cfg, "local_banded", False)
+              and not decode and causal and window is not None
+              and Sq == k.shape[1] and Sq % window == 0
+              and Sq // window >= 2)
+    if banded:
+        o = _banded_local_attn(qg, k, v, window=window, scale=scale,
+                               cap=cfg.attn_softcap)
+    elif decode or Sq * k.shape[1] <= cfg.attn_chunk * cfg.attn_chunk:
+        o = _direct_attn(qg, k, v, qpos=positions, kpos=kpos,
+                         causal=causal, window=window, kv_len=kv_len,
+                         scale=scale, cap=cfg.attn_softcap)
+    else:
+        o = _chunked_attn(qg, k, v, qpos=positions, causal=causal,
+                          window=window, scale=scale,
+                          cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+    o = o.reshape(B, Sq, H, hd)
+    if getattr(cfg, "bf16_activation_ar", False):
+        # emit the row-parallel output dot natively in bf16 so the TP
+        # all-reduce of the partials is 2-byte, not pre-convert f32
+        out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt),
+                         preferred_element_type=dt)
+    else:
+        out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return constrain(out, ("batch", None, None)), new_cache

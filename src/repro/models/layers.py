@@ -1,0 +1,181 @@
+"""Shared model layers: norms (MMA-reduction statistics), MLPs, embeddings,
+RoPE, softcapping."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reduction as tcred
+from repro.distributed.sharding import constrain
+from repro.models.param import Param
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_specs(d: int):
+    return {"scale": Param((d,), ("embed_no_fsdp",), "zeros")}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6, use_mma: bool = True,
+            fast_apply: bool = False):
+    """RMSNorm with (1+scale) weighting (gemma convention, scale init 0).
+
+    The mean-of-squares row statistic is an arithmetic reduction — with
+    ``use_mma`` it is computed by the paper's ones-MMA encoding
+    (tc_reduce_rows) so the statistic runs on the matrix unit.
+
+    ``fast_apply`` (§Perf): the statistic stays f32, but the
+    normalisation multiply runs in the input dtype — removes two f32
+    round-trips over the (B, S, D) stream per norm.
+    """
+    d = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    if use_mma:
+        rows = xf.reshape(-1, d)
+        ms = tcred.tc_reduce_rows(rows * rows).reshape(x.shape[:-1] + (1,))
+        ms = ms / d
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(ms + eps)
+    if fast_apply:
+        w = (1.0 + params["scale"].astype(jnp.float32)).astype(x.dtype)
+        return x * rstd.astype(x.dtype) * w
+    y = xf * rstd
+    out = y * (1.0 + params["scale"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm_specs(d: int):
+    return {"scale": Param((d,), ("embed_no_fsdp",), "ones"),
+            "bias": Param((d,), ("embed_no_fsdp",), "zeros")}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = y * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_specs(d: int, kind: str = "rmsnorm"):
+    return layernorm_specs(d) if kind == "layernorm" else rmsnorm_specs(d)
+
+
+def apply_norm(params, x, *, kind: str = "rmsnorm", use_mma: bool = True,
+               fast_apply: bool = False):
+    if kind == "layernorm":
+        return layernorm(params, x)
+    return rmsnorm(params, x, use_mma=use_mma, fast_apply=fast_apply)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_specs(d: int, d_ff: int):
+    return {
+        "wi_gate": Param((d, d_ff), ("embed", "mlp")),
+        "wi_up": Param((d, d_ff), ("embed", "mlp")),
+        "wo": Param((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x, *, act: str = "silu", bf16_out: bool = False):
+    """Gated MLP (SiLU/GeLU-GLU)."""
+    dt = x.dtype
+    gate = x @ params["wi_gate"].astype(dt)
+    up = x @ params["wi_up"].astype(dt)
+    gate = constrain(gate, ("batch", "seq", "mlp"))
+    if act == "silu":
+        h = jax.nn.silu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        raise ValueError(act)
+    if bf16_out:  # bf16-native row-parallel dot -> 2-byte TP all-reduce
+        return jax.lax.dot_general(
+            h, params["wo"].astype(dt),
+            dimension_numbers=(((h.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=dt)
+    return h @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------- embeds
+
+
+def embed_specs(vocab: int, d: int):
+    # sigma = 1/sqrt(d): unit-variance logits under a tied unembedding
+    # (embed_scale restores unit stream variance where configured).
+    return {"table": Param((vocab, d), ("vocab", "embed"), "embed",
+                           scale=d ** -0.5)}
+
+
+def embed_lookup(params, tokens, *, scale: bool, d: int,
+                 compute_dtype=jnp.bfloat16, cast_table: bool = False,
+                 onehot: bool = False):
+    table = params["table"]
+    if cast_table or onehot:
+        # cast before the gather: the vocab-sharded lookup's psum over
+        # 'model' then moves bf16 rows, not f32 (§Perf)
+        table = table.astype(compute_dtype)
+    if onehot:
+        # §Perf: the paper's encoding applied to the gather — a one-hot
+        # MMA against the vocab-sharded table (local matmul + psum of
+        # (B,S,D)), replacing SPMD's gather path (which replicates the
+        # table: "involuntary full rematerialization" warnings).  The
+        # backward becomes onehot^T @ d_x — scatter-free.
+        oh = jax.nn.one_hot(tokens, table.shape[0], dtype=compute_dtype)
+        oh = constrain(oh, ("batch", None, "vocab"))
+        x = jax.lax.dot_general(
+            oh, table, dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=compute_dtype)
+    else:
+        x = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+    if scale:
+        x = x * jnp.asarray(jnp.sqrt(d), compute_dtype)
+    return constrain(x, ("batch", "seq", None))
+
+
+def unembed(params, x, *, softcap=None):
+    """Project to vocab logits (tied table or separate head)."""
+    logits = x @ params["table"].T.astype(x.dtype)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits.astype(jnp.float32) / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin of shape (..., dim//2)."""
+    half = dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, *, theta: float, fraction: float = 1.0):
+    """x: (B, S, H, D). Rotates the first ``fraction`` of D."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = rope_angles(positions, rot, theta)   # (B, S, rot//2)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Two execution forms, selected per phase:
+  * train/prefill — "expanded": the compressed KV latent c_kv is
+    up-projected to per-head K/V (compute-optimal for long products).
+  * decode — "absorbed": W_uk is folded into the query and W_uv into the
+    output so attention runs directly against the cached latent
+    (B, S, kv_lora + rope); the KV cache is ~14x smaller than GQA's.
+
+Cache layout: {"ckv": (B, cap, kv_lora), "krope": (B, cap, rope), "idx"}.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.param import Param
+
+NEG_INF = -2.0e38
+
+
+def mla_specs(cfg):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": Param((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": Param((m.q_lora_rank,), ("q_lora",), "zeros"),
+        "wq_b": Param((m.q_lora_rank, H, qk), ("q_lora", "heads", "head_dim")),
+        "wkv_a": Param((d, m.kv_lora_rank + m.qk_rope_dim),
+                       ("embed", "kv_lora")),
+        "kv_norm": Param((m.kv_lora_rank,), ("kv_lora",), "zeros"),
+        "wk_b": Param((m.kv_lora_rank, H, m.qk_nope_dim),
+                      ("kv_lora", "heads", "head_dim")),
+        "wv_b": Param((m.kv_lora_rank, H, m.v_head_dim),
+                      ("kv_lora", "heads", "head_dim")),
+        "wo": Param((H, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def make_cache(cfg, batch: int, capacity: int, *, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, capacity, m.qk_rope_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes():
+    return {"ckv": ("batch", None, "kv_lora"),
+            "krope": ("batch", None, None), "idx": ()}
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _project_q(params, cfg, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    ql = _rms(x @ params["wq_a"].astype(dt), params["q_norm"])
+    ql = constrain(ql, ("batch", None, "q_lora"))
+    q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_b"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    pos_b = jnp.broadcast_to(positions[None, :], x.shape[:2])
+    q_rope = L.apply_rope(q_rope, pos_b, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(params, cfg, x, positions):
+    """c_kv (B,S,r) latent + shared rotary key (B,S,rope)."""
+    m = cfg.mla
+    dt = x.dtype
+    kv = x @ params["wkv_a"].astype(dt)
+    ckv, kr = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    ckv = _rms(ckv, params["kv_norm"])
+    pos_b = jnp.broadcast_to(positions[None, :], x.shape[:2])
+    kr = L.apply_rope(kr[:, :, None, :], pos_b, theta=cfg.rope_theta)[:, :, 0]
+    return ckv, kr
+
+
+def mla_attention(params, cfg, x, *, positions, cache=None,
+                  decode: bool = False):
+    """Returns (out, new_cache)."""
+    m = cfg.mla
+    dt = x.dtype
+    B, Sq, _ = x.shape
+    H = cfg.num_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    ckv_new, kr_new = _latent_kv(params, cfg, x, positions)
+
+    new_cache = cache
+    if cache is not None:
+        idx = cache["idx"]
+        ckv_buf = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, idx, 0))
+        kr_buf = jax.lax.dynamic_update_slice(
+            cache["krope"], kr_new.astype(cache["krope"].dtype), (0, idx, 0))
+        new_cache = dict(cache, ckv=ckv_buf, krope=kr_buf, idx=idx + Sq)
+
+    if decode:
+        # Absorbed form against the latent cache.
+        ckv, kr = new_cache["ckv"].astype(dt), new_cache["krope"].astype(dt)
+        kv_len = new_cache["idx"]  # already includes this step
+        # q_eff[h] = q_nope[h] @ W_uk[h]^T : (B,Sq,H,r)
+        q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"].astype(dt))
+        s = jnp.einsum("bshr,bcr->bhsc", q_eff, ckv,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bshk,bck->bhsc", q_rope, kr,
+                        preferred_element_type=jnp.float32)
+        s *= scale
+        kpos = jnp.arange(ckv.shape[1], dtype=jnp.int32)
+        valid = (kpos[None, :] <= positions[:, None]) & (kpos < kv_len)[None]
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(dt)
+        # (output order bhsr keeps the batched-dot layout CPU-executable)
+        ctx = jnp.einsum("bhsc,bcr->bhsr", p, ckv,
+                         preferred_element_type=jnp.float32).astype(dt)
+        ctx = ctx.transpose(0, 2, 1, 3)  # -> (B, S, H, r)
+        o = jnp.einsum("bshr,rhk->bshk", ctx, params["wv_b"].astype(dt))
+    else:
+        # Expanded form: per-head K/V from the latent, flash-style attend.
+        from repro.models.attention import _chunked_attn, _direct_attn
+        k_nope = jnp.einsum("bcr,rhk->bchk", ckv_new,
+                            params["wk_b"].astype(dt))
+        v = jnp.einsum("bcr,rhk->bchk", ckv_new, params["wv_b"].astype(dt))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_new[:, :, None, :],
+                                      (B, Sq, H, m.qk_rope_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = constrain(q, ("batch", None, "heads", "head_dim"))
+        k = constrain(k, ("batch", None, "heads", "head_dim"))
+        qg = q[:, :, :, None, :].reshape(B, Sq, H, 1, -1)
+        if Sq * Sq <= cfg.attn_chunk * cfg.attn_chunk:
+            o = _direct_attn(qg, k, v, qpos=positions,
+                             kpos=jnp.arange(Sq, dtype=jnp.int32),
+                             causal=True, window=None, kv_len=None,
+                             scale=scale, cap=None)
+        else:
+            o = _chunked_attn(qg, k, v, qpos=positions, causal=True,
+                              window=None, scale=scale, cap=None,
+                              chunk=cfg.attn_chunk)
+        o = o.reshape(B, Sq, H, m.v_head_dim)
+
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return constrain(out, ("batch", None, None)), new_cache

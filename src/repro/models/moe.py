@@ -1,0 +1,230 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Layout (EP x ETP):
+  * tokens: batch-sharded over ('pod','data'), replicated over 'model';
+  * expert weights: experts -> 'data' (EP), expert-ffn -> 'model' (ETP);
+  * dispatch: sort-based capacity buffers + all_to_all over 'data';
+  * expert matmul partial over the ffn shard, psum over 'model';
+  * combine: all_to_all back + weighted scatter-add per token.
+
+Everything runs inside one shard_map region so the collectives are
+explicit (they appear as all-to-all / all-reduce in the compiled HLO and
+are measured by the roofline harness).  Routing statistics (tokens per
+expert for the load-balance loss) use the paper's ones-MMA encoding.
+
+DeepSeek-V3: sigmoid router, top-8 of 256 + 1 shared expert, routed
+scaling.  Arctic: softmax top-2 of 128 + parallel dense-residual MLP.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+import jax.numpy as jnp
+
+from repro.core import integration as ci
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models.param import Param
+
+
+def moe_specs(cfg):
+    d, mc = cfg.d_model, cfg.moe
+    e, f = mc.num_experts, mc.d_ff_expert
+    # layout B "etp": EP over data, expert-ffn TP over model (tokens
+    # model-replicated).  layout A "ep2d": one expert (group) per device,
+    # EP over the merged (data, model) axis, sequence split over model —
+    # no ffn psum, 16x smaller dispatch buffers (see §Perf deepseek).
+    ax = ("experts_2d", None, None) if cfg.moe_layout == "ep2d" \
+        else ("experts", None, "expert_mlp")
+    ax_o = ("experts_2d", None, None) if cfg.moe_layout == "ep2d" \
+        else ("experts", "expert_mlp", None)
+    specs = {
+        "router": Param((d, e), ("embed_no_fsdp", None), scale=0.02,
+                        init="normal"),
+        "wi_gate": Param((e, d, f), ax),
+        "wi_up": Param((e, d, f), ax),
+        "wo": Param((e, f, d), ax_o),
+    }
+    if mc.num_shared_experts:
+        specs["shared"] = L.mlp_specs(d, mc.d_ff_expert
+                                      * mc.num_shared_experts)
+    if mc.dense_residual:
+        specs["dense"] = L.mlp_specs(d, cfg.d_ff)
+    return specs
+
+
+def _route(cfg, router_w, x_flat):
+    """(T, D) -> top-k expert ids (T,k), weights (T,k), probs (T,E)."""
+    mc = cfg.moe
+    logits = (x_flat.astype(jnp.float32)
+              @ router_w.astype(jnp.float32))
+    if mc.router == "sigmoid":           # deepseek-v3
+        scores = jax.nn.sigmoid(logits)
+        w, ids = jax.lax.top_k(scores, mc.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        w = w * mc.routed_scaling
+        probs = scores / jnp.maximum(jnp.sum(scores, -1, keepdims=True),
+                                     1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, mc.top_k)
+    return ids, w, probs
+
+
+def _aux_loss(cfg, probs, ids):
+    """Load-balance loss (Switch-style): E * <f, p>.
+
+    f (fraction of tokens to each expert) is computed from the one-hot
+    assignment with the paper's ones-MMA contraction (expert_counts)."""
+    e = cfg.moe.num_experts
+    onehot = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)
+    counts = ci.expert_counts(onehot,
+                              method=cfg.reduce_method)      # (E,)
+    f = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    p = jnp.mean(probs, axis=0)
+    return e * jnp.sum(f * p)
+
+
+def _dispatch_combine(cfg, params, x_flat, ep_size: int,
+                      ep_axis: Optional[str], tp_axis: Optional[str]):
+    """Local shard body: returns (out_flat, aux_loss)."""
+    mc = cfg.moe
+    t, d = x_flat.shape
+    e, k = mc.num_experts, mc.top_k
+    cap = max(8, int(math.ceil(mc.capacity_factor * t * k / e)))
+    dt = x_flat.dtype
+
+    ids, w, probs = _route(cfg, params["router"], x_flat)
+    aux = _aux_loss(cfg, probs, ids)
+
+    # ---- sort-based capacity dispatch -> (E*C, D) buffer
+    flat_e = ids.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, e * cap)  # OOB -> dropped
+    token_of = order // k
+    buf = jnp.zeros((e * cap, d), dt).at[slot].add(
+        x_flat[token_of] * keep[:, None].astype(dt), mode="drop")
+
+    # ---- EP all-to-all over the data axis: experts go home
+    buf = buf.reshape(e, cap, d)
+    if ep_axis is not None and ep_size > 1:
+        buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
+                                 tiled=True)       # (E/ep, ep*C, D)
+    # §Perf: name the post-a2a buffer so the remat policy can save it —
+    # otherwise the backward pass re-runs the whole dispatch INCLUDING
+    # the all-to-all (3x collective traffic instead of 2x).
+    buf = _ckpt_name(buf, "moe_post_a2a")
+    e_loc = buf.shape[0]
+
+    # ---- expert FFN (ffn sharded over 'model'; partial -> psum)
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"].astype(dt))
+    act = jax.nn.silu(gate) * up if cfg.act == "silu" else \
+        jax.nn.gelu(gate, approximate=True) * up
+    out = jnp.einsum("ecf,efd->ecd", act, params["wo"].astype(dt))
+    if tp_axis is not None:
+        out = jax.lax.psum(out, tp_axis)
+
+    # ---- return tokens to their senders
+    if ep_axis is not None and ep_size > 1:
+        out = jax.lax.all_to_all(out, ep_axis, split_axis=1, concat_axis=0,
+                                 tiled=True)       # (E, C, D)
+    out = _ckpt_name(out, "moe_expert_out")
+    out = out.reshape(e * cap, d)
+
+    # ---- weighted combine back to token order
+    gathered = out.at[slot].get(mode="fill", fill_value=0)   # (T*k, D)
+    w_flat = w.reshape(-1)[order].astype(dt) * keep.astype(dt)
+    y = jnp.zeros((t, d), dt).at[token_of].add(gathered * w_flat[:, None])
+    return y, aux
+
+
+def _ep2d_body(cfg, d, ep_axes, batch_axes):
+    """Layout A body: sequence-split over 'model', EP over the merged
+    (data, model) axis, full-width expert ffn (no psum)."""
+    model_size = None  # bound at trace via axis_size
+
+    def body(router, wg, wu, wo, xl):
+        p = {"router": router, "wi_gate": wg, "wi_up": wu, "wo": wo}
+        msz = jax.lax.axis_size("model")
+        midx = jax.lax.axis_index("model")
+        b, s, _ = xl.shape
+        s_loc = s // msz
+        xs = jax.lax.dynamic_slice_in_dim(xl, midx * s_loc, s_loc, axis=1)
+        tl = xs.reshape(-1, d)
+        ep_size = 1
+        for a in ep_axes:
+            ep_size *= jax.lax.axis_size(a)
+        y, aux = _dispatch_combine(cfg, p, tl, ep_size, ep_axes, None)
+        y = y.reshape(b, s_loc, d)
+        # restore the full sequence on every model peer
+        y = jax.lax.all_gather(y, "model", axis=1, tiled=True)
+        aux = jax.lax.pmean(aux, batch_axes + ("model",))
+        return y, aux
+
+    return body
+
+
+def moe_block(params, cfg, x):
+    """x: (B, S, D) batch-sharded. Returns (out, aux_loss scalar)."""
+    mesh = shd.current_mesh()
+    b, s, d = x.shape
+    dt = x.dtype
+
+    n_dev = 1 if mesh is None else math.prod(mesh.devices.shape)
+    if mesh is None or n_dev == 1:
+        y, aux = _dispatch_combine(cfg, params, x.reshape(-1, d), 1, None,
+                                   None)
+        out = y.reshape(b, s, d)
+    else:
+        from jax.sharding import PartitionSpec as P
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dm = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+        use_ep2d = (cfg.moe_layout == "ep2d"
+                    and cfg.moe.num_experts % dm == 0
+                    and s % mesh.shape.get("model", 1) == 0)
+        if use_ep2d:
+            wspec = P(("data", "model"), None, None)
+            body = _ep2d_body(cfg, d, ("data", "model"), batch_axes)
+        else:
+            ep_axis = "data" if "data" in mesh.shape else None
+            tp_axis = "model" if "model" in mesh.shape else None
+            ep_size = mesh.shape.get("data", 1)
+
+            def body(router, wg, wu, wo, xl):
+                p = {"router": router, "wi_gate": wg, "wi_up": wu,
+                     "wo": wo}
+                tl = xl.reshape(-1, d)
+                y, aux = _dispatch_combine(cfg, p, tl, ep_size, ep_axis,
+                                           tp_axis)
+                aux = jax.lax.pmean(aux, batch_axes)
+                return y.reshape(xl.shape), aux
+
+            wspec = P("data", None, "model")
+        wspec_o = P(("data", "model"), None, None) if use_ep2d \
+            else P("data", "model", None)
+        out, aux = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), wspec, wspec, wspec_o,
+                      P(batch_axes, None, None)),
+            out_specs=(P(batch_axes, None, None), P()),
+            check_vma=False,
+        )(params["router"], params["wi_gate"], params["wi_up"],
+          params["wo"], x)
+
+    # shared experts (deepseek) / dense residual (arctic): plain TP MLPs.
+    if cfg.moe.num_shared_experts:
+        out = out + L.mlp(params["shared"], x, act=cfg.act)
+    if cfg.moe.dense_residual:
+        out = out + L.mlp(params["dense"], x, act=cfg.act)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,85 @@
+"""Single-source-of-truth parameter declaration.
+
+Modules declare nested dicts of ``Param(shape, axes, init)`` descriptors;
+``init_tree`` materialises arrays, ``axes_tree`` yields the parallel
+logical-axes pytree consumed by distributed.sharding, and ``stack_specs``
+prepends a "layers" axis for lax.scan'd stacks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "fan_in"      # fan_in | zeros | ones | normal | embed
+    scale: float = 1.0
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialise(key, p: Param):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "normal":
+        return (p.scale * jax.random.normal(key, p.shape)).astype(p.dtype)
+    if p.init == "embed":
+        return (jax.random.normal(key, p.shape) * p.scale).astype(p.dtype)
+    if p.init == "fan_in":
+        fan_in = p.shape[0] if len(p.shape) == 1 else math.prod(p.shape[:-1])
+        std = p.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, p.shape)).astype(p.dtype)
+    raise ValueError(p.init)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def init_tree(key, specs):
+    """Nested dict of Param -> nested dict of arrays (split keys stably)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialise(k, p) for k, p in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def axes_tree(specs):
+    return jax.tree_util.tree_map(lambda p: p.axes, specs, is_leaf=is_param)
+
+
+def shapes_tree(specs):
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), specs,
+        is_leaf=is_param)
+
+
+def stack_specs(specs, n: int):
+    """Prepend a scanned 'layers' axis of size n to every Param."""
+    def one(p: Param) -> Param:
+        return Param((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale,
+                     p.dtype)
+    return jax.tree_util.tree_map(one, specs, is_leaf=is_param)
+
+
+def init_stacked(key, specs, n: int):
+    """vmap-init n independent copies (leading 'layers' dim)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_tree(k, specs))(keys)
+
+
+def count_params(tree) -> int:
+    return sum(int(math.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(tree))

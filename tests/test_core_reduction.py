@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) for the reduction engine's
+invariants + the PRAM theory module."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (global_norm, masked_mean, reduce_sum, squared_sum,
+                        tc_reduce, theory)
+from repro.core.reduction import tc_reduce_rows
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=70_000), st.integers(0, 2**31))
+def test_tc_reduce_matches_fp64(n, seed):
+    x = np.random.default_rng(seed).normal(size=n).astype(np.float32)
+    got = float(tc_reduce(jnp.asarray(x)))
+    want = float(np.sum(x, dtype=np.float64))
+    assert abs(got - want) <= 1e-4 * max(np.sqrt(n), 1.0) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=5_000), st.integers(0, 2**31))
+def test_permutation_invariance(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    a = float(tc_reduce(jnp.asarray(x)))
+    b = float(tc_reduce(jnp.asarray(rng.permutation(x))))
+    assert abs(a - b) <= 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=5_000),
+       st.floats(min_value=-4.0, max_value=4.0,
+                 allow_nan=False, allow_infinity=False),
+       st.integers(0, 2**31))
+def test_linearity(n, alpha, seed):
+    x = np.random.default_rng(seed).normal(size=n).astype(np.float32)
+    lhs = float(tc_reduce(jnp.asarray(alpha * x)))
+    rhs = alpha * float(tc_reduce(jnp.asarray(x)))
+    assert abs(lhs - rhs) <= 1e-3 * (1 + abs(alpha)) * max(np.sqrt(n), 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=3_000),
+       st.integers(min_value=1, max_value=3_000), st.integers(0, 2**31))
+def test_concat_additivity(n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=n1).astype(np.float32)
+    b = rng.normal(size=n2).astype(np.float32)
+    whole = float(tc_reduce(jnp.asarray(np.concatenate([a, b]))))
+    parts = float(tc_reduce(jnp.asarray(a))) + float(
+        tc_reduce(jnp.asarray(b)))
+    assert abs(whole - parts) <= 1e-3
+
+
+@pytest.mark.parametrize("variant", ["single_pass", "recurrence", "split"])
+@pytest.mark.parametrize("chain", [1, 3, 5])
+def test_variants_agree(variant, chain):
+    x = np.random.default_rng(1).normal(size=250_000).astype(np.float32)
+    got = float(tc_reduce(jnp.asarray(x), variant=variant, chain=chain))
+    np.testing.assert_allclose(got, np.sum(x, dtype=np.float64),
+                               rtol=1e-5, atol=1e-2)
+
+
+def test_rows_reduction():
+    x = np.random.default_rng(2).normal(size=(33, 457)).astype(np.float32)
+    got = np.asarray(tc_reduce_rows(jnp.asarray(x)))
+    np.testing.assert_allclose(got, x.sum(axis=1), rtol=1e-5, atol=1e-4)
+
+
+def test_masked_mean_and_global_norm():
+    v = jnp.asarray(np.arange(24, dtype=np.float32).reshape(4, 6))
+    m = jnp.asarray((np.arange(24).reshape(4, 6) % 2 == 0)
+                    .astype(np.float32))
+    got = float(masked_mean(v, m))
+    want = float(np.mean(np.arange(0, 24, 2)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    tree = {"a": jnp.full((7, 3), 2.0), "b": jnp.ones((5,))}
+    np.testing.assert_allclose(float(global_norm(tree)),
+                               np.sqrt(7 * 3 * 4.0 + 5.0), rtol=1e-6)
+
+
+def test_reduce_methods_agree():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(128, 384))
+                    .astype(np.float32))
+    a = float(reduce_sum(x, method="mma"))
+    b = float(reduce_sum(x, method="vpu"))
+    c = float(reduce_sum(x, method="mma_chained"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(a, c, rtol=1e-5, atol=1e-3)
+    s = float(squared_sum(x))
+    np.testing.assert_allclose(s, float(jnp.sum(x * x)), rtol=1e-5)
+
+
+# ----------------------------------------------------------- theory
+
+
+def test_speedup_matches_paper():
+    # Paper §7: m=4 (hardware MMA) gives S = 3.2; the experimental
+    # single-pass speedup "practically matches" this.
+    assert theory.speedup(4) == pytest.approx(3.2)
+    # TPU MXU tile m=128:
+    assert theory.speedup(128) == pytest.approx(11.2)
+
+
+def test_chained_cost_reduces_to_two_mma():
+    # Eq. 24 with R=1 equals Eq. 16.
+    for n in (1e4, 1e6, 1e9):
+        assert theory.t_tc_chained(n, m=16, chain=1) == pytest.approx(
+            theory.t_tc(n, m=16))
+
+
+def test_pram_optimal_chain_is_one():
+    # Under infinite processors the model says R=1 (paper §4.3); the
+    # experimental optimum R=4..5 is a finite-hardware effect.
+    assert theory.optimal_chain(1e6, m=16) == 1
+
+
+def test_op_count_useful_flops():
+    oc = theory.op_count(10_000, m=128, chain=4)
+    assert oc.useful_flops == 9_999
+    assert oc.mma_ops == 5      # ceil(1e4 / (4*128^2)) groups * (R+1)
+    assert oc.mxu_flops == oc.mma_ops * 2 * 128 ** 3

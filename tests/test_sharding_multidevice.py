@@ -1,0 +1,257 @@
+"""Sharding-rule unit tests + multi-device SPMD tests.
+
+The multi-device tests run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main test
+process keeps the real single CPU device, per the dry-run contract)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import (DEFAULT_RULES, axis_rules,
+                                        spec_for)
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_spec_divisibility_fallback():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # kv_heads=8 not divisible by 16 -> replicated
+    assert spec_for((8, 128), ("kv_heads", "head_dim"), mesh,
+                    DEFAULT_RULES) == \
+        __import__("jax").sharding.PartitionSpec(None, None)
+    # heads=32 divisible -> model
+    assert spec_for((32, 128), ("heads", "head_dim"), mesh,
+                    DEFAULT_RULES)[0] == "model"
+
+
+def test_spec_multi_axis_batch():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = spec_for((256, 4096), ("batch", None), mesh, DEFAULT_RULES)
+    assert spec[0] == ("pod", "data")
+
+
+def test_spec_single_axis_when_odd():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # batch=16: pod(2) divides -> then data(16) doesn't divide 8 -> pod only
+    spec = spec_for((16,), ("batch",), mesh, DEFAULT_RULES)
+    assert spec[0] == "pod"
+
+
+def test_axis_rules_noop_without_mesh():
+    import jax.numpy as jnp
+    from repro.distributed.sharding import constrain
+    with axis_rules(None):
+        x = constrain(jnp.ones((4, 4)), ("batch", None))
+    assert x.shape == (4, 4)
+
+
+_SUBPROCESS_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs import registry
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.launch import train as trainlib
+    from repro.models import model_zoo
+
+    def run(arch, data, model_p):
+        cfg = registry.get_config(arch, smoke=True)
+        model = model_zoo.build(cfg)
+        mesh = Mesh(np.array(jax.devices()[:data*model_p]).reshape(
+            data, model_p), ("data", "model"))
+        shape = ShapeConfig("t", 16, 8, "train")
+        tconf = TrainConfig(microbatches=2, total_steps=10,
+                            warmup_steps=2)
+        step, make_init, s_shard, _ = trainlib.jit_train_step(
+            model, tconf, mesh, model.input_specs(shape))
+        state = jax.jit(make_init, out_shardings=s_shard)(
+            jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(
+                     0, cfg.vocab_size, (8, 16)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(
+                     0, cfg.vocab_size, (8, 16)), jnp.int32),
+                 "mask": jnp.ones((8, 16), jnp.float32)}
+        losses = []
+        for _ in range(3):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        return losses
+
+    out = {}
+    for arch in ["gemma2-2b", "deepseek-v3-671b"]:
+        l_1x1 = run(arch, 1, 1)
+        l_4x2 = run(arch, 4, 2)
+        out[arch] = {"single": l_1x1, "mesh4x2": l_4x2}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+_ELASTIC_PROG = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.checkpoint import manager as ckpt
+    from repro.configs import registry
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.distributed.fault_tolerance import remesh
+    from repro.launch import train as trainlib
+    from repro.models import model_zoo
+
+    cfg = registry.get_config("gemma2-2b", smoke=True)
+    model = model_zoo.build(cfg)
+    shape = ShapeConfig("t", 16, 8, "train")
+    tconf = TrainConfig(microbatches=1, total_steps=10, warmup_steps=2)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                (8, 16)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                (8, 16)), jnp.int32),
+             "mask": jnp.ones((8, 16), jnp.float32)}
+
+    def build(devices, model_parallel):
+        mesh = remesh(devices, model_parallel=model_parallel)
+        step, make_init, s_shard, _ = trainlib.jit_train_step(
+            model, tconf, mesh, model.input_specs(shape))
+        return mesh, step, make_init, s_shard
+
+    # train 2 steps on a 4x2 mesh, checkpoint
+    mesh, step, make_init, s_shard = build(jax.devices(), 2)
+    state = jax.jit(make_init, out_shardings=s_shard)(
+        jax.random.PRNGKey(0))
+    for _ in range(2):
+        state, _ = step(state, batch)
+    d = tempfile.mkdtemp()
+    ckpt.save(d, 2, state)
+
+    # "lose" 4 devices -> elastic re-mesh to 2x2, restore, continue
+    mesh2, step2, make_init2, s_shard2 = build(jax.devices()[:4], 2)
+    template = jax.jit(make_init2, out_shardings=s_shard2)(
+        jax.random.PRNGKey(0))
+    restored, at = ckpt.restore(d, template)
+    assert at == 2
+    losses = []
+    for _ in range(2):
+        restored, m = step2(restored, batch)
+        losses.append(float(m["loss"]))
+
+    # reference: uninterrupted 4 steps on the original mesh
+    ref = jax.jit(make_init, out_shardings=s_shard)(jax.random.PRNGKey(0))
+    ref_losses = []
+    for _ in range(4):
+        ref, m = step(ref, batch)
+        ref_losses.append(float(m["loss"]))
+    print("RESULT" + json.dumps({"elastic": losses,
+                                 "reference": ref_losses[2:]}))
+""")
+
+
+@pytest.mark.slow
+def test_elastic_restore_onto_smaller_mesh():
+    """Checkpoint on a (4 data x 2 model) mesh, lose half the devices,
+    remesh() to (2 x 2), restore, continue — losses must match the
+    uninterrupted run (the 1000+-node recovery contract)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    p = subprocess.run([sys.executable, "-c", _ELASTIC_PROG],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert p.returncode == 0, p.stderr[-3000:]
+    line = [l for l in p.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    np.testing.assert_allclose(out["elastic"], out["reference"],
+                               rtol=2e-3)
+
+
+_EP2D_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs import registry
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.launch import train as trainlib
+    from repro.models import model_zoo
+
+    def losses(layout):
+        cfg = registry.get_config("deepseek-v3-671b", smoke=True)
+        cfg = dataclasses.replace(cfg, moe_layout=layout,
+            moe=dataclasses.replace(cfg.moe, num_experts=8))
+        model = model_zoo.build(cfg)
+        mesh = Mesh(np.array(jax.devices()[:8]).reshape(4, 2),
+                    ("data", "model"))
+        shape = ShapeConfig("t", 16, 8, "train")
+        tconf = TrainConfig(microbatches=1, total_steps=10,
+                            warmup_steps=2)
+        step, make_init, s_shard, _ = trainlib.jit_train_step(
+            model, tconf, mesh, model.input_specs(shape))
+        state = jax.jit(make_init, out_shardings=s_shard)(
+            jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(
+                     0, cfg.vocab_size, (8, 16)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(
+                     0, cfg.vocab_size, (8, 16)), jnp.int32),
+                 "mask": jnp.ones((8, 16), jnp.float32)}
+        out = []
+        for _ in range(3):
+            state, m = step(state, batch)
+            out.append(float(m["loss"]))
+        return out
+
+    print("RESULT" + json.dumps({"etp": losses("etp"),
+                                 "ep2d": losses("ep2d")}))
+""")
+
+
+@pytest.mark.slow
+def test_moe_ep2d_layout_matches_etp():
+    """The §Perf ep2d MoE layout (seq-split + EP over data x model) must
+    compute the same function as the baseline ETP layout."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    p = subprocess.run([sys.executable, "-c", _EP2D_PROG],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert p.returncode == 0, p.stderr[-3000:]
+    line = [l for l in p.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    np.testing.assert_allclose(out["etp"], out["ep2d"], rtol=0.02)
+
+
+@pytest.mark.slow
+def test_spmd_train_matches_single_device():
+    """A (4 data x 2 model) SPMD train run must match single-device
+    losses (same global batch, same init) — proves the sharding rules +
+    MoE shard_map EP path compute the same function."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    p = subprocess.run([sys.executable, "-c", _SUBPROCESS_PROG],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert p.returncode == 0, p.stderr[-3000:]
+    line = [l for l in p.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    for arch, r in out.items():
+        np.testing.assert_allclose(r["single"], r["mesh4x2"], rtol=0.03,
+                                   err_msg=arch)
+        assert r["single"][-1] < r["single"][0], arch
