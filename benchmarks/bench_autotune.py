@@ -1,0 +1,74 @@
+"""Autotuner driver: emit the plan table the way bench_rb_sweep emits
+raw timings.
+
+Three sections, all CSV via benchmarks.common.emit:
+
+  autotune/plan/...      the winning ReductionPlan per (op, n, dtype)
+                         under the analytical cost model (what a
+                         hardware-less CI sees; deterministic);
+  autotune/sweep/...     the full candidate table for one problem —
+                         the paper's R x B grid with model scores, so
+                         the R-vs-block-size tension is visible;
+  autotune/measured/...  a small measured sweep (wall-clock; Pallas
+                         runs interpret=True on CPU) proving the
+                         measure path end-to-end.
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_autotune.py
+It also writes the tuned registry to ``autotune_plans.json`` next to
+this file — the JSON form documented in README ("plan registry").
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import autotune
+
+SIZES = [1 << 14, 1 << 17, 1 << 20]
+DTYPES = [jnp.float32, jnp.bfloat16]
+OPS = ["reduce_sum", "squared_sum"]
+MEASURE_N = 1 << 14   # small: every candidate times quickly in interpret
+
+
+def _fmt(plan: autotune.ReductionPlan) -> str:
+    return (f"method={plan.method};variant={plan.variant};"
+            f"R={plan.chain};B={plan.block_rows};src={plan.source}")
+
+
+def run():
+    reg = autotune.PlanRegistry()
+
+    # 1. winning plans (model mode): the table method='auto' consults.
+    for op in OPS:
+        for dtype in DTYPES:
+            for n in SIZES:
+                plan = autotune.get_plan(n, dtype, op=op, registry=reg)
+                emit(f"autotune/plan/{op}/n={n}/"
+                     f"{jnp.dtype(dtype).name}", plan.cost, _fmt(plan))
+
+    # 2. the full R x B candidate grid for one problem (paper Figs. 3/5).
+    n = SIZES[-1]
+    for cand in autotune.candidate_plans(n, jnp.float32):
+        emit(f"autotune/sweep/n={n}/{cand.method}"
+             f"/R={cand.chain}/B={cand.block_rows}",
+             autotune.model_cost(cand, n, jnp.float32), "units=model")
+
+    # 3. measured mode end-to-end (CPU: XLA-CPU + Pallas interpret).
+    best = autotune.autotune(MEASURE_N, jnp.float32, measure=True)
+    emit(f"autotune/measured/best/n={MEASURE_N}", best.cost, _fmt(best))
+    for cand in autotune.candidate_plans(MEASURE_N, jnp.float32):
+        us = autotune.measure_cost(cand, MEASURE_N, jnp.float32,
+                                   iters=3, warmup=1)
+        emit(f"autotune/measured/n={MEASURE_N}/{cand.method}"
+             f"/R={cand.chain}/B={cand.block_rows}", us, "wall-clock")
+
+    out = os.path.join(os.path.dirname(__file__), "autotune_plans.json")
+    reg.save(out)
+    emit("autotune/registry_saved", float(len(reg)), out)
+
+
+if __name__ == "__main__":
+    run()

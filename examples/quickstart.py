@@ -3,7 +3,8 @@
 Runs on CPU in seconds:
   1. reduce a million numbers three ways (paper's three variants),
   2. check precision vs the FP64 oracle (paper §5.4),
-  3. use the engine inside a tiny LM training step (loss + grad-norm).
+  3. let the autotuner pick the configuration (method='auto'),
+  4. use the engine inside a tiny LM training step (loss + grad-norm).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import global_norm, tc_reduce, theory
+from repro.core import autotune, global_norm, reduce_sum, tc_reduce, theory
 from repro.core.precision import fp64_oracle, normal_input, percent_error
 from repro.kernels import mma_reduce
 
@@ -36,7 +37,14 @@ def main():
           f" (paper: 3.2x measured), m=128 (TPU MXU) -> "
           f"{theory.speedup(128)}")
 
-    # --- 3. inside a training step ----------------------------------
+    # --- 3. autotuned dispatch (the R-vs-B search made automatic) ----
+    got = float(reduce_sum(xj, method="auto"))
+    plan = autotune.get_plan(xj.size, xj.dtype, op="reduce_sum")
+    print(f"\nmethod='auto'       : {got:+.6f}  via plan "
+          f"[{plan.method} variant={plan.variant} R={plan.chain} "
+          f"B={plan.block_rows} source={plan.source}]")
+
+    # --- 4. inside a training step ----------------------------------
     from repro.configs import registry
     from repro.models import model_zoo
     cfg = registry.get_config("gemma2-2b", smoke=True)

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# CI-style tier-1 check: the canonical suite invocation (see ROADMAP.md).
+#
+#   scripts/check.sh            # full suite
+#   scripts/check.sh -m 'not slow'   # fast lane (skips multi-device
+#                                    # subprocess tests); extra args are
+#                                    # passed straight to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -3,7 +3,11 @@ JAX module, plus its PRAM cost model, precision policy, and the hooks
 that make it a first-class service of the training/serving framework.
 """
 
-from repro.core.reduction import tc_reduce, tc_reduce_rows  # noqa: F401
+from repro.core.reduction import (  # noqa: F401
+    tc_reduce,
+    tc_reduce_lastdim,
+    tc_reduce_rows,
+)
 from repro.core.integration import (  # noqa: F401
     reduce_sum,
     reduce_mean,

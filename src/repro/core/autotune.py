@@ -1,0 +1,383 @@
+"""Reduction autotuner: pick (method, variant, chain, block_rows) per
+problem, the way the paper picks (R, B) per GPU geometry.
+
+The paper's central performance result (Figs. 3/5/11) is that the best
+chained-MMA configuration depends on geometry: small thread-blocks
+favour chains of R=4..5 while large blocks favour R=1, and the PRAM
+model alone (which always says R=1) cannot predict the crossover.  This
+module makes that selection automatic:
+
+  * ``candidate_plans``   enumerates the paper's R in {1..5} x block
+    geometry sweep as executable ``ReductionPlan``s;
+  * ``autotune``          scores candidates either by wall-clock
+    measurement (``measure=True``; what you run on real hardware) or by
+    an analytical cost model backed by ``core.theory`` — Brent's-theorem
+    style: PRAM depth (Eq. 24) + work/parallelism + per-grid-step
+    overhead + padding waste — so a plan exists even with no hardware;
+  * ``PlanRegistry``      caches winners keyed by (op, n-bucket, dtype,
+    backend), survives a JSON round-trip, and can be pre-seeded from a
+    file (``REPRO_AUTOTUNE_CACHE``);
+  * ``get_plan``          the one-call entry the framework hooks
+    (``integration.reduce_sum(method="auto")`` etc.) consult.
+
+Problem sizes are bucketed to the next power of two so one tuned plan
+serves every n in its octave — the paper's curves are smooth in n, and
+this keeps the registry (and the number of compiled kernel variants)
+small.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Iterator, Optional
+
+import jax
+
+from repro.core import theory
+
+# The paper's experimental sweep: chain length R (Figs. 3/5) and block
+# geometry B (threads/block on GPU -> rows per VMEM tile here).
+CHAINS = (1, 2, 3, 4, 5)
+BLOCK_ROWS = (32, 128, 512)
+DEFAULT_M = 128  # MXU tile; the paper's m (=16 in wmma fragments).
+
+# Cost-model constants (arbitrary PRAM-step units; only ratios matter).
+_GRID_STEP_OVERHEAD = 48.0     # sequential grid-step / block-launch cost
+_VPU_THROUGHPUT = 8 * 128      # VPU lanes: elements per step
+_MXU_THROUGHPUT = 128 * 128    # MXU tile: elements folded per ones-MMA
+_PARALLELISM = 8               # concurrent grid workers the model assumes
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionPlan:
+    """One executable reduction configuration.
+
+    ``method`` selects the execution engine (the ``integration.Method``
+    namespace); variant/chain/block_rows are the paper's knobs.  ``cost``
+    is the score that won the sweep, in microseconds when
+    ``source='measured'`` and in model units when ``source='model'``.
+    """
+    method: str                 # 'mma' | 'mma_chained' | 'pallas' | 'vpu'
+    variant: str = "single_pass"
+    chain: int = 1
+    block_rows: int = 128
+    m: int = DEFAULT_M
+    source: str = "model"       # 'model' | 'measured'
+    cost: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReductionPlan":
+        return cls(**d)
+
+
+def bucket_n(n: int) -> int:
+    """Round n up to a power of two — the plan-cache granularity."""
+    return 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+
+
+# engine restriction: None = all engines; a method name = just that
+# engine; a tuple of method names = any of those.
+Engine = Optional[object]
+
+
+def _engine_methods(engine: Engine) -> Optional[tuple]:
+    if engine is None:
+        return None
+    if isinstance(engine, str):
+        return (engine,)
+    return tuple(engine)
+
+
+def _engine_tag(engine: Engine) -> str:
+    methods = _engine_methods(engine)
+    return "" if methods is None else "|" + "+".join(methods)
+
+
+def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
+             engine: Engine = None) -> str:
+    """Registry key: op|n-bucket|dtype|backend[|engine] (a flat string so
+    the registry JSON-serialises as a plain object).  The engine suffix
+    appears only for engine-restricted tunes (e.g. the tc_reduce /
+    mma_reduce 'auto' spellings), so a per-engine geometry plan never
+    collides with the unrestricted cross-engine winner."""
+    if backend is None:
+        backend = jax.default_backend()
+    return (f"{op}|{bucket_n(n)}|{jax.numpy.dtype(dtype).name}|{backend}"
+            f"{_engine_tag(engine)}")
+
+
+# VMEM feasibility for Pallas tiles: input tile + f32 working copy,
+# double-buffered, must fit on-chip.
+_VMEM_BUDGET = 16 * 2**20
+
+
+def candidate_plans(n: int, dtype, *, chains=CHAINS, blocks=BLOCK_ROWS,
+                    m: int = DEFAULT_M,
+                    engine: Engine = None) -> Iterator[ReductionPlan]:
+    """Enumerate the sweep space for one problem.
+
+    The unrestricted space is the two geometry-free engines ('mma'
+    ones-contraction and the 'vpu' baseline), the pure-JAX chained core
+    over R, and the Pallas kernel over R x B; ``engine`` narrows it to
+    one engine (or a tuple of engines) — how the per-engine 'auto'
+    geometry spellings get a plan actually tuned for the engine they
+    run.  Pallas plans are pruned when the tile would not fit VMEM
+    (dtype-dependent) or would be strictly more padding than a smaller
+    config.
+    """
+    methods = _engine_methods(engine)
+    itemsize = jax.numpy.dtype(dtype).itemsize
+
+    def want(name):
+        return methods is None or name in methods
+
+    if want("mma"):
+        yield ReductionPlan(method="mma")
+    if want("vpu"):
+        yield ReductionPlan(method="vpu")
+    if want("mma_chained"):
+        for chain in chains:
+            yield ReductionPlan(method="mma_chained", chain=chain, m=m)
+    if want("pallas"):
+        prev_tile = 0
+        for chain in chains:
+            for block_rows in blocks:
+                tile = chain * block_rows * m
+                if 2 * tile * (itemsize + 4) > _VMEM_BUDGET:
+                    continue  # double-buffered tile would not fit VMEM
+                if tile > max(n, 1) and prev_tile > max(n, 1):
+                    continue  # strictly more padding than a smaller one
+                prev_tile = tile
+                yield ReductionPlan(method="pallas", chain=chain,
+                                    block_rows=block_rows, m=m)
+
+
+# --------------------------------------------------------------- cost
+
+
+def model_cost(plan: ReductionPlan, n: int, dtype) -> float:
+    """Analytical score: Brent-style T = depth + work/P + overheads.
+
+    Depth is the paper's chained PRAM bound T^R(n) = (2R+3) log_{Rm^2} n
+    (Eq. 24).  Work/P and the per-grid-step overhead are the
+    finite-hardware corrections the paper observes experimentally (which
+    is why the model here does NOT always answer R=1 like the pure PRAM
+    model does).  Padding waste penalises tiles much larger than n.
+    """
+    n = max(int(n), 1)
+    itemsize = jax.numpy.dtype(dtype).itemsize
+    mem = n * itemsize / (4.0 * _VPU_THROUGHPUT)  # streaming traffic
+    if plan.method == "vpu":
+        # classic reduction: 4 log2 n depth + vectorised work
+        return theory.t_classic(n) + n / (_VPU_THROUGHPUT * _PARALLELISM) \
+            + mem
+    if plan.method == "mma":
+        # one big ones-contraction: two-MMA depth, full-MXU work
+        return theory.t_tc(n, plan.m) + n / (_MXU_THROUGHPUT *
+                                             _PARALLELISM) + mem
+    # chained engines: depth from Eq. 24 + MMA work + grid overheads
+    tile = plan.chain * plan.block_rows * plan.m
+    groups = max(1, math.ceil(n / tile))
+    padded = groups * tile
+    depth = theory.t_tc_chained(n, plan.m, plan.chain)
+    oc = theory.op_count(padded, m=plan.m, chain=plan.chain,
+                         variant=plan.variant)
+    work = oc.mma_ops / _PARALLELISM
+    grid = 0.0
+    waste = (padded - n) / (_MXU_THROUGHPUT * _PARALLELISM)
+    if plan.method == "pallas":
+        # sequential grid walk: one VMEM tile fill + accumulate per step
+        grid = _GRID_STEP_OVERHEAD * groups / _PARALLELISM
+    return depth + work + grid + waste + mem
+
+
+def measure_cost(plan: ReductionPlan, n: int, dtype, *, iters: int = 5,
+                 warmup: int = 2, seed: int = 0) -> float:
+    """Wall-clock microseconds for one plan on this host's backend."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    x = jax.numpy.asarray(
+        rng.standard_normal(n).astype(np.float32)).astype(dtype)
+    fn = lambda v: execute_plan(v, plan)
+    out = None
+    for _ in range(warmup):
+        out = fn(x)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def execute_plan(x, plan: ReductionPlan, *, square: bool = False):
+    """Run one reduction under ``plan``. Returns an f32 scalar.
+
+    This is the single dispatch point of the subsystem — the auto path
+    of every ``integration`` hook lands here, so no call site carries
+    hardcoded chain/block_rows.
+    """
+    import jax.numpy as jnp
+    from repro.core import reduction as R
+    if square and plan.method == "mma":
+        from repro.core.integration import _contract_all
+        return _contract_all(x, x)
+    if square and plan.method == "pallas":
+        from repro.kernels import mma_squared_sum
+        return mma_squared_sum(x, chain=plan.chain,
+                               block_rows=plan.block_rows)
+    if square:
+        x = x.astype(jnp.float32)
+        x = x * x
+    if plan.method == "vpu":
+        return jnp.sum(x.astype(jnp.float32))
+    if plan.method == "mma":
+        from repro.core.integration import _contract_all
+        return _contract_all(x, jnp.ones_like(x))
+    if plan.method == "mma_chained":
+        return R.tc_reduce(x, variant=plan.variant, chain=plan.chain,
+                           m=plan.m)
+    if plan.method == "pallas":
+        from repro.kernels import mma_reduce
+        return mma_reduce(x, variant=plan.variant, chain=plan.chain,
+                          block_rows=plan.block_rows)
+    raise ValueError(f"unknown plan method: {plan.method!r}")
+
+
+# ----------------------------------------------------------- registry
+
+
+class PlanRegistry:
+    """In-memory plan cache with JSON persistence.
+
+    The JSON form is a flat object {key: plan-dict} (see ``plan_key``
+    for the key grammar) so tuned tables can be shipped with a model
+    config or diffed in review.
+    """
+
+    def __init__(self):
+        self._plans: dict[str, ReductionPlan] = {}
+
+    def get(self, key: str) -> Optional[ReductionPlan]:
+        return self._plans.get(key)
+
+    def put(self, key: str, plan: ReductionPlan) -> None:
+        self._plans[key] = plan
+
+    def items(self):
+        return sorted(self._plans.items())
+
+    def clear(self) -> None:
+        self._plans.clear()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def to_json(self) -> str:
+        return json.dumps({k: p.to_dict() for k, p in self.items()},
+                          indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlanRegistry":
+        reg = cls()
+        for k, d in json.loads(text).items():
+            reg.put(k, ReductionPlan.from_dict(d))
+        return reg
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "PlanRegistry":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+_default_registry: Optional[PlanRegistry] = None
+
+
+def default_registry() -> PlanRegistry:
+    """Process-wide registry; pre-seeded from $REPRO_AUTOTUNE_CACHE if
+    that file exists (ship a tuned table, skip the sweep)."""
+    global _default_registry
+    if _default_registry is None:
+        path = os.environ.get("REPRO_AUTOTUNE_CACHE", "")
+        if path and os.path.exists(path):
+            _default_registry = PlanRegistry.load(path)
+        else:
+            _default_registry = PlanRegistry()
+    return _default_registry
+
+
+def reset_default_registry() -> None:
+    """Drop the process-wide cache (tests / re-tuning)."""
+    global _default_registry
+    _default_registry = None
+
+
+# ----------------------------------------------------------- autotune
+
+
+def autotune(n: int, dtype, *, op: str = "reduce_sum",
+             measure: bool = False, chains=CHAINS, blocks=BLOCK_ROWS,
+             m: int = DEFAULT_M, engine: Engine = None) -> ReductionPlan:
+    """Sweep the candidate space for one problem and return the winner.
+
+    ``measure=False`` (default, and the only mode that is deterministic
+    and hardware-free) scores with the analytical model; ``measure=True``
+    times each candidate on the live backend.  ``engine`` restricts the
+    sweep (per-engine geometry tuning).  The sweep is bucketed — score
+    at the bucket size so every n in the octave gets the same plan.
+    """
+    nb = bucket_n(n)
+    best: Optional[ReductionPlan] = None
+    for cand in candidate_plans(nb, dtype, chains=chains, blocks=blocks,
+                                m=m, engine=engine):
+        if measure:
+            cost = measure_cost(cand, nb, dtype)
+            cand = dataclasses.replace(cand, source="measured", cost=cost)
+        else:
+            cost = model_cost(cand, nb, dtype)
+            cand = dataclasses.replace(cand, source="model", cost=cost)
+        if best is None or cand.cost < best.cost:
+            best = cand
+    if best is None:
+        raise ValueError(f"no reduction candidates for engine={engine!r}")
+    return best
+
+
+def get_plan(n: int, dtype, *, op: str = "reduce_sum",
+             backend: Optional[str] = None,
+             registry: Optional[PlanRegistry] = None,
+             measure: bool = False, engine: Engine = None) -> ReductionPlan:
+    """Cached plan lookup — the entry point of ``method='auto'``.
+
+    Registry hit: return it (a model-mode entry is re-tuned and
+    replaced when ``measure=True`` asks for wall-clock evidence).
+    Miss: run ``autotune`` once for the (op, n-bucket, dtype, backend
+    [, engine]) key and cache the winner.  Measuring for a backend
+    other than the live one is refused rather than silently timed on
+    the wrong hardware.
+    """
+    reg = registry if registry is not None else default_registry()
+    key = plan_key(op, n, dtype, backend, engine)
+    plan = reg.get(key)
+    if plan is not None and not (measure and plan.source != "measured"):
+        return plan
+    if measure and backend is not None \
+            and backend != jax.default_backend():
+        raise ValueError(
+            f"cannot measure for backend {backend!r} on a "
+            f"{jax.default_backend()!r} host; use the analytical model "
+            f"(measure=False) or tune on the target hardware")
+    plan = autotune(n, dtype, op=op, measure=measure, engine=engine)
+    reg.put(key, plan)
+    return plan

@@ -2,8 +2,14 @@
 stack routes through the paper's MMA encoding via these helpers.
 
 ``method`` selection:
+  'auto'   consult the autotuner's plan registry (repro.core.autotune)
+           for this (op, n, dtype, backend) and dispatch to the winning
+           engine/geometry — no hardcoded chain/block_rows anywhere on
+           this path.
   'mma'    pure-JAX chained ones-MMA (repro.core.reduction) — safe under
            pjit/shard_map, lowers to MXU matmuls on TPU.  Default.
+  'mma_chained' the explicitly R-chained tc_reduce core (paper-
+           structured; benchmark/ablation path).
   'pallas' hand-tiled Pallas kernel (repro.kernels) — single-device hot
            paths; interpret=True on CPU.
   'vpu'    plain jnp.sum in f32 — the classic-reduction baseline the
@@ -13,14 +19,32 @@ stack routes through the paper's MMA encoding via these helpers.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core import reduction as R
 
-Method = Literal["mma", "pallas", "vpu"]
+Method = Literal["auto", "mma", "mma_chained", "pallas", "vpu"]
+
+
+def _auto_engine():
+    """Engine restriction for the 'auto' hooks.
+
+    On a single device every engine is legal.  Under a live multi-device
+    mesh only the ones-contraction and VPU forms are distribution-safe —
+    the chained/Pallas engines flatten-and-pad, which forces a re-layout
+    of sharded activations (and miscompiles on some XLA versions, see
+    reduction.tc_reduce_lastdim) — so auto restricts itself to them.
+    """
+    from repro.distributed import sharding as shd
+    mesh = shd.current_mesh()
+    if mesh is not None and math.prod(mesh.devices.shape) > 1:
+        return ("mma", "vpu")
+    return None
 
 
 def _contract_all(a, b) -> jax.Array:
@@ -40,10 +64,15 @@ def _contract_all(a, b) -> jax.Array:
 def reduce_sum(x, *, method: Method = "mma", chain: int = 4) -> jax.Array:
     """Sum of all elements, f32 scalar.
 
-    'mma' uses the ones-contraction form (distribution-safe); the
-    explicitly-chained tc_reduce and the Pallas kernel are the
-    paper-structured single-device paths (benchmarks / kernels).
+    'auto' selects a cached ReductionPlan (engine + chain + block_rows)
+    from the autotuner; 'mma' uses the ones-contraction form
+    (distribution-safe); the explicitly-chained tc_reduce and the Pallas
+    kernel are the paper-structured single-device paths.
     """
+    if method == "auto":
+        plan = autotune.get_plan(x.size, x.dtype, op="reduce_sum",
+                                 engine=_auto_engine())
+        return autotune.execute_plan(x, plan)
     if method == "mma":
         return _contract_all(x, jnp.ones_like(x))
     if method == "mma_chained":
@@ -51,7 +80,9 @@ def reduce_sum(x, *, method: Method = "mma", chain: int = 4) -> jax.Array:
     if method == "pallas":
         from repro.kernels import mma_reduce
         return mma_reduce(x, variant="single_pass", chain=chain)
-    return jnp.sum(x.astype(jnp.float32))
+    if method == "vpu":
+        return jnp.sum(x.astype(jnp.float32))
+    raise ValueError(f"unknown reduction method: {method!r}")
 
 
 def reduce_mean(x, *, method: Method = "mma") -> jax.Array:
@@ -63,9 +94,19 @@ def masked_mean(values, mask, *, method: Method = "mma") -> jax.Array:
 
     In 'mma' form the numerator is a *single* contraction <values, mask>
     (the mask plays the ones-matrix role), and the denominator is
-    <mask, ones>."""
+    <mask, ones>.  'auto' keeps that fused form when the plan picks the
+    contraction engine, otherwise reduces values*mask under the plan."""
     mask = mask.astype(values.dtype)
-    if method == "mma":
+    if method == "auto":
+        plan = autotune.get_plan(values.size, values.dtype,
+                                 op="masked_mean", engine=_auto_engine())
+        if plan.method == "mma":
+            num = _contract_all(values, mask)
+            den = _contract_all(mask, jnp.ones_like(mask))
+        else:
+            num = autotune.execute_plan(values * mask, plan)
+            den = autotune.execute_plan(mask, plan)
+    elif method == "mma":
         num = _contract_all(values, mask)
         den = _contract_all(mask, jnp.ones_like(mask))
     else:
@@ -79,7 +120,12 @@ def squared_sum(x, *, method: Method = "mma") -> jax.Array:
 
     'mma' form: <x, x> as one dot_general — the reduction rides the MXU
     with x itself standing in for the ones matrix.  'pallas' uses the
-    hand-tiled chained-MMA kernel (kernels.mma_squared_sum)."""
+    hand-tiled chained-MMA kernel (kernels.mma_squared_sum).  'auto'
+    dispatches whatever engine the plan registry tuned for this size."""
+    if method == "auto":
+        plan = autotune.get_plan(x.size, x.dtype, op="squared_sum",
+                                 engine=_auto_engine())
+        return autotune.execute_plan(x, plan, square=True)
     if method == "mma":
         return _contract_all(x, x)
     if method == "pallas":
@@ -90,7 +136,9 @@ def squared_sum(x, *, method: Method = "mma") -> jax.Array:
 
 
 def global_norm(tree, *, method: Method = "mma") -> jax.Array:
-    """L2 norm over a pytree (gradient clipping / monitoring)."""
+    """L2 norm over a pytree (gradient clipping / monitoring).  'auto'
+    tunes per leaf — big embedding tables and small biases get their own
+    plans."""
     leaves = jax.tree_util.tree_leaves(tree)
     total = functools.reduce(
         jnp.add, [squared_sum(l, method=method) for l in leaves])
@@ -101,7 +149,14 @@ def expert_counts(router_probs_onehot, *, method: Method = "mma"):
     """Tokens-per-expert from a (tokens, experts) one-hot/weight matrix:
     counts = [1]_{1 x T} x onehot — a single ones-MMA (load-balance loss).
     """
-    t, e = router_probs_onehot.shape
+    if method == "auto":
+        # Row-wise op: only the contraction and VPU engines apply, so
+        # the sweep is restricted to them — the plan's method IS what
+        # runs (no geometry fields are involved for either engine).
+        plan = autotune.get_plan(router_probs_onehot.size,
+                                 router_probs_onehot.dtype,
+                                 op="expert_counts", engine=("mma", "vpu"))
+        method = plan.method
     if method == "vpu":
         return jnp.sum(router_probs_onehot.astype(jnp.float32), axis=0)
     return R.tc_reduce_rows(router_probs_onehot.T)  # (E,) f32

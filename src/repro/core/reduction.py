@@ -78,12 +78,16 @@ def _mma_collapse(acc, *, cast_to=None):
     return out[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "variant", "chain", "m", "mma_fraction", "keep_f32_partials"))
-def tc_reduce(x, *, variant: Variant = "single_pass", chain: int = 4,
-              m: int = DEFAULT_M, mma_fraction: float = 0.5,
+def tc_reduce(x, *, variant: Variant = "single_pass",
+              chain: int | str = 4, m: int = DEFAULT_M,
+              mma_fraction: float = 0.5,
               keep_f32_partials: bool = True) -> jax.Array:
     """Arithmetic reduction R(X) via chained ones-MMAs. Returns f32 scalar.
+
+    ``chain='auto'`` resolves the chain length from the autotuner's plan
+    registry for this (n, dtype, backend) instead of a call-site
+    constant (resolution uses only trace-time shape/dtype info, so it is
+    jit-safe).
 
     variant='single_pass' (paper §5.2): one chained-MMA level, per-group
       scalars combined in f32 (the atomics stage of the paper).  Partials
@@ -97,6 +101,20 @@ def tc_reduce(x, *, variant: Variant = "single_pass", chain: int = 4,
     variant='split' (paper §5.3): fraction ``mma_fraction`` of the data
       reduced by MMA chains, the rest by a plain VPU sum.
     """
+    if chain == "auto":
+        from repro.core import autotune
+        chain = autotune.get_plan(x.size, x.dtype, op="reduce_sum",
+                                  engine="mma_chained").chain
+    return _tc_reduce_impl(x, variant=variant, chain=int(chain), m=m,
+                           mma_fraction=mma_fraction,
+                           keep_f32_partials=keep_f32_partials)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "variant", "chain", "m", "mma_fraction", "keep_f32_partials"))
+def _tc_reduce_impl(x, *, variant: Variant, chain: int, m: int,
+                    mma_fraction: float,
+                    keep_f32_partials: bool) -> jax.Array:
     in_dtype = x.dtype
     if variant == "split":
         flat = jnp.ravel(x)
@@ -125,6 +143,25 @@ def tc_reduce(x, *, variant: Variant = "single_pass", chain: int = 4,
         return scalars[0]
 
     raise ValueError(f"unknown variant: {variant!r}")
+
+
+@jax.jit
+def tc_reduce_lastdim(x) -> jax.Array:
+    """Ones-contraction over the last dim: (..., d) -> (...) f32 sums.
+
+    The batched form of the row-wise ones-MMA: no reshape, no tile
+    padding — the leading dims stay exactly as the caller (and the
+    partitioner) laid them out.  Used by the fused-norm statistic, which
+    runs under pjit on activations sharded over (batch, seq): collapsing
+    those dims with a reshape forces a re-layout and (on some XLA
+    versions) miscompiles inside scan+remat regions, so the fused paths
+    must reduce in place.
+    """
+    ones = jnp.ones((x.shape[-1],), dtype=x.dtype)
+    return lax.dot_general(
+        x, ones,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("chain", "m"))

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def hierarchical_psum(x, *, fast_axis: str = "data",
                       slow_axis: str = "pod"):
@@ -71,6 +73,6 @@ def compressed_grad_allreduce(grads, errors, mesh,
         return red, err
 
     spec = jax.tree_util.tree_map(lambda _: P(), grads)
-    return jax.shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                         out_specs=(spec, spec), check_vma=False)(
+    return compat.shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                            out_specs=(spec, spec), check_vma=False)(
         grads, errors)

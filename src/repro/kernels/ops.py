@@ -36,12 +36,29 @@ def _to_tiles(x, tile_rows: int, m: int):
     return flat.reshape(padded // m, m)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "variant", "chain", "block_rows", "m", "mma_fraction", "interpret"))
-def mma_reduce(x, *, variant: str = "single_pass", chain: int = 4,
-               block_rows: int = 128, m: int = MXU_M,
+def _resolve_auto(x, chain, block_rows, *, op: str):
+    """Turn chain/block_rows='auto' into the registry's tuned ints.
+
+    The sweep is restricted to the Pallas engine so the geometry comes
+    from a plan tuned for THIS kernel, not from whatever engine won the
+    unrestricted cross-engine sweep."""
+    if chain == "auto" or block_rows == "auto":
+        from repro.core import autotune
+        plan = autotune.get_plan(x.size, x.dtype, op=op, engine="pallas")
+        if chain == "auto":
+            chain = plan.chain
+        if block_rows == "auto":
+            block_rows = plan.block_rows
+    return int(chain), int(block_rows)
+
+
+def mma_reduce(x, *, variant: str = "single_pass", chain=4,
+               block_rows=128, m: int = MXU_M,
                mma_fraction: float = 0.5, interpret=None) -> jax.Array:
     """Sum all elements of ``x`` via chained ones-MMAs. Returns f32 scalar.
+
+    ``chain``/``block_rows`` accept 'auto' to resolve the tile geometry
+    from the autotuner's plan registry for this (n, dtype, backend).
 
     variant:
       'single_pass'  one kernel pass, sequential-grid f32 VMEM accumulator
@@ -51,6 +68,18 @@ def mma_reduce(x, *, variant: str = "single_pass", chain: int = 4,
       'split'        fraction ``mma_fraction`` of every tile on the MXU,
                      remainder on the VPU (paper §5.3).
     """
+    chain, block_rows = _resolve_auto(x, chain, block_rows,
+                                      op="reduce_sum")
+    return _mma_reduce_impl(x, variant=variant, chain=chain,
+                            block_rows=block_rows, m=m,
+                            mma_fraction=mma_fraction,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "variant", "chain", "block_rows", "m", "mma_fraction", "interpret"))
+def _mma_reduce_impl(x, *, variant: str, chain: int, block_rows: int,
+                     m: int, mma_fraction: float, interpret) -> jax.Array:
     itp = _should_interpret(interpret)
     if variant == "single_pass":
         x2d = _to_tiles(x, chain * block_rows, m)
@@ -75,12 +104,21 @@ def mma_reduce(x, *, variant: str = "single_pass", chain: int = 4,
     raise ValueError(f"unknown variant: {variant!r}")
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "chain", "block_rows", "m", "interpret"))
-def mma_squared_sum(x, *, chain: int = 4, block_rows: int = 128,
+def mma_squared_sum(x, *, chain=4, block_rows=128,
                     m: int = MXU_M, interpret=None) -> jax.Array:
     """sum(x^2) via chained ones-MMAs (gradient-norm hot-spot): squares
-    on the VPU, row-reduction on the MXU, f32 partials throughout."""
+    on the VPU, row-reduction on the MXU, f32 partials throughout.
+    ``chain``/``block_rows`` accept 'auto' (autotuned plan registry)."""
+    chain, block_rows = _resolve_auto(x, chain, block_rows,
+                                      op="squared_sum")
+    return _mma_squared_sum_impl(x, chain=chain, block_rows=block_rows,
+                                 m=m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chain", "block_rows", "m", "interpret"))
+def _mma_squared_sum_impl(x, *, chain: int, block_rows: int,
+                          m: int, interpret) -> jax.Array:
     itp = _should_interpret(interpret)
     x2d = _to_tiles(x, chain * block_rows, m)
     out = _mr.single_pass_call(x2d, chain=chain, block_rows=block_rows,

@@ -32,9 +32,10 @@ def rmsnorm(params, x, *, eps: float = 1e-6, use_mma: bool = True,
     d = x.shape[-1]
     xf = x.astype(jnp.float32)
     if use_mma:
-        rows = xf.reshape(-1, d)
-        ms = tcred.tc_reduce_rows(rows * rows).reshape(x.shape[:-1] + (1,))
-        ms = ms / d
+        # In-place batched ones-contraction: no (-1, d) reshape — the
+        # activation keeps its (batch, seq) sharding (see
+        # tc_reduce_lastdim for why the reshape form is unsafe here).
+        ms = tcred.tc_reduce_lastdim(xf * xf)[..., None] / d
     else:
         ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     rstd = jax.lax.rsqrt(ms + eps)

@@ -25,6 +25,7 @@ import jax
 from jax.ad_checkpoint import checkpoint_name as _ckpt_name
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import integration as ci
 from repro.distributed import sharding as shd
 from repro.models import layers as L
@@ -148,22 +149,23 @@ def _dispatch_combine(cfg, params, x_flat, ep_size: int,
     return y, aux
 
 
-def _ep2d_body(cfg, d, ep_axes, batch_axes):
+def _ep2d_body(cfg, d, ep_axes, batch_axes, mesh_shape):
     """Layout A body: sequence-split over 'model', EP over the merged
-    (data, model) axis, full-width expert ffn (no psum)."""
-    model_size = None  # bound at trace via axis_size
+    (data, model) axis, full-width expert ffn (no psum).
+
+    Axis SIZES come statically from ``mesh_shape`` (they are known at
+    trace time, and ``jax.lax.axis_size`` does not exist on older JAX);
+    only the axis INDEX is a runtime query."""
+    msz = mesh_shape.get("model", 1)
+    ep_size = math.prod(mesh_shape.get(a, 1) for a in ep_axes)
 
     def body(router, wg, wu, wo, xl):
         p = {"router": router, "wi_gate": wg, "wi_up": wu, "wo": wo}
-        msz = jax.lax.axis_size("model")
         midx = jax.lax.axis_index("model")
         b, s, _ = xl.shape
         s_loc = s // msz
         xs = jax.lax.dynamic_slice_in_dim(xl, midx * s_loc, s_loc, axis=1)
         tl = xs.reshape(-1, d)
-        ep_size = 1
-        for a in ep_axes:
-            ep_size *= jax.lax.axis_size(a)
         y, aux = _dispatch_combine(cfg, p, tl, ep_size, ep_axes, None)
         y = y.reshape(b, s_loc, d)
         # restore the full sequence on every model peer
@@ -194,7 +196,8 @@ def moe_block(params, cfg, x):
                     and s % mesh.shape.get("model", 1) == 0)
         if use_ep2d:
             wspec = P(("data", "model"), None, None)
-            body = _ep2d_body(cfg, d, ("data", "model"), batch_axes)
+            body = _ep2d_body(cfg, d, ("data", "model"), batch_axes,
+                              dict(mesh.shape))
         else:
             ep_axis = "data" if "data" in mesh.shape else None
             tp_axis = "model" if "model" in mesh.shape else None
@@ -212,7 +215,7 @@ def moe_block(params, cfg, x):
             wspec = P("data", None, "model")
         wspec_o = P(("data", "model"), None, None) if use_ep2d \
             else P("data", "model", None)
-        out, aux = jax.shard_map(
+        out, aux = compat.shard_map(
             body,
             mesh=mesh,
             in_specs=(P(), wspec, wspec, wspec_o,

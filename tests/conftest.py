@@ -1,0 +1,27 @@
+"""Shared test configuration.
+
+Puts ``src/`` on sys.path so the suite runs with a bare ``pytest``
+invocation too (the tier-1 command still sets PYTHONPATH=src
+explicitly), and resets the autotuner's process-wide plan registry
+between modules so no test observes plans cached by another.
+"""
+
+import os
+import sys
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(_SRC) not in (os.path.abspath(p) for p in sys.path):
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+
+@pytest.fixture()
+def fresh_plan_registry():
+    """An isolated, empty PlanRegistry (and a clean default registry)."""
+    from repro.core import autotune
+    autotune.reset_default_registry()
+    try:
+        yield autotune.PlanRegistry()
+    finally:
+        autotune.reset_default_registry()

@@ -1,28 +1,34 @@
-"""Property-based tests (hypothesis) for the reduction engine's
-invariants + the PRAM theory module."""
+"""Tests for the reduction engine's invariants + the PRAM theory module.
+
+Property-based cases run when ``hypothesis`` is installed (see
+requirements-dev.txt); a deterministic pytest-parametrized subset of the
+same invariants runs everywhere, so this module always collects and the
+engine is never untested on a hypothesis-less install.
+"""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (global_norm, masked_mean, reduce_sum, squared_sum,
                         tc_reduce, theory)
-from repro.core.reduction import tc_reduce_rows
+from repro.core.reduction import tc_reduce_lastdim, tc_reduce_rows
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(min_value=1, max_value=70_000), st.integers(0, 2**31))
-def test_tc_reduce_matches_fp64(n, seed):
+def _check_matches_fp64(n, seed):
     x = np.random.default_rng(seed).normal(size=n).astype(np.float32)
     got = float(tc_reduce(jnp.asarray(x)))
     want = float(np.sum(x, dtype=np.float64))
     assert abs(got - want) <= 1e-4 * max(np.sqrt(n), 1.0) + 1e-5
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(min_value=2, max_value=5_000), st.integers(0, 2**31))
-def test_permutation_invariance(n, seed):
+def _check_permutation_invariance(n, seed):
     rng = np.random.default_rng(seed)
     x = rng.normal(size=n).astype(np.float32)
     a = float(tc_reduce(jnp.asarray(x)))
@@ -30,22 +36,14 @@ def test_permutation_invariance(n, seed):
     assert abs(a - b) <= 1e-3
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(min_value=1, max_value=5_000),
-       st.floats(min_value=-4.0, max_value=4.0,
-                 allow_nan=False, allow_infinity=False),
-       st.integers(0, 2**31))
-def test_linearity(n, alpha, seed):
+def _check_linearity(n, alpha, seed):
     x = np.random.default_rng(seed).normal(size=n).astype(np.float32)
     lhs = float(tc_reduce(jnp.asarray(alpha * x)))
     rhs = alpha * float(tc_reduce(jnp.asarray(x)))
     assert abs(lhs - rhs) <= 1e-3 * (1 + abs(alpha)) * max(np.sqrt(n), 1)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(min_value=1, max_value=3_000),
-       st.integers(min_value=1, max_value=3_000), st.integers(0, 2**31))
-def test_concat_additivity(n1, n2, seed):
+def _check_concat_additivity(n1, n2, seed):
     rng = np.random.default_rng(seed)
     a = rng.normal(size=n1).astype(np.float32)
     b = rng.normal(size=n2).astype(np.float32)
@@ -53,6 +51,62 @@ def test_concat_additivity(n1, n2, seed):
     parts = float(tc_reduce(jnp.asarray(a))) + float(
         tc_reduce(jnp.asarray(b)))
     assert abs(whole - parts) <= 1e-3
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(min_value=1, max_value=70_000),
+           st.integers(0, 2**31))
+    def test_tc_reduce_matches_fp64(n, seed):
+        _check_matches_fp64(n, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=2, max_value=5_000),
+           st.integers(0, 2**31))
+    def test_permutation_invariance(n, seed):
+        _check_permutation_invariance(n, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=1, max_value=5_000),
+           st.floats(min_value=-4.0, max_value=4.0,
+                     allow_nan=False, allow_infinity=False),
+           st.integers(0, 2**31))
+    def test_linearity(n, alpha, seed):
+        _check_linearity(n, alpha, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=1, max_value=3_000),
+           st.integers(min_value=1, max_value=3_000),
+           st.integers(0, 2**31))
+    def test_concat_additivity(n1, n2, seed):
+        _check_concat_additivity(n1, n2, seed)
+
+
+# Deterministic fallback sweep over the same invariants: sizes straddle
+# the group boundary chain*m^2 and include 1, odd, and non-tile-multiple
+# values. Runs with or without hypothesis.
+FALLBACK_SIZES = [1, 7, 127, 128, 129, 4096, 65_537, 70_000]
+
+
+@pytest.mark.parametrize("n", FALLBACK_SIZES)
+def test_tc_reduce_matches_fp64_cases(n):
+    _check_matches_fp64(n, seed=n)
+
+
+@pytest.mark.parametrize("n", [2, 129, 4999])
+def test_permutation_invariance_cases(n):
+    _check_permutation_invariance(n, seed=n)
+
+
+@pytest.mark.parametrize("n,alpha", [(1, -4.0), (129, 0.5), (4999, 3.25)])
+def test_linearity_cases(n, alpha):
+    _check_linearity(n, alpha, seed=n)
+
+
+@pytest.mark.parametrize("n1,n2", [(1, 1), (129, 2999), (3000, 17)])
+def test_concat_additivity_cases(n1, n2):
+    _check_concat_additivity(n1, n2, seed=n1)
 
 
 @pytest.mark.parametrize("variant", ["single_pass", "recurrence", "split"])
@@ -68,6 +122,13 @@ def test_rows_reduction():
     x = np.random.default_rng(2).normal(size=(33, 457)).astype(np.float32)
     got = np.asarray(tc_reduce_rows(jnp.asarray(x)))
     np.testing.assert_allclose(got, x.sum(axis=1), rtol=1e-5, atol=1e-4)
+
+
+def test_lastdim_reduction_any_rank():
+    x = np.random.default_rng(3).normal(size=(3, 5, 61)).astype(np.float32)
+    got = np.asarray(tc_reduce_lastdim(jnp.asarray(x)))
+    assert got.shape == (3, 5)
+    np.testing.assert_allclose(got, x.sum(axis=-1), rtol=1e-5, atol=1e-4)
 
 
 def test_masked_mean_and_global_norm():

@@ -1,8 +1,19 @@
-"""Property tests (hypothesis) for the logical-axis sharding engine —
-the invariants every mesh/shape combination must satisfy."""
+"""Tests for the logical-axis sharding engine — the invariants every
+mesh/shape combination must satisfy.
+
+Property-based cases run when ``hypothesis`` is installed; a
+deterministic parametrized sweep of the same invariants runs everywhere
+so the module always collects.
+"""
 
 import jax
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
 
 from repro.distributed.sharding import DEFAULT_RULES, spec_for
 
@@ -22,14 +33,7 @@ MESHES = [
 AXIS_NAMES = sorted(DEFAULT_RULES)
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    st.integers(0, len(MESHES) - 1),
-    st.lists(st.tuples(st.sampled_from(AXIS_NAMES + [None]),
-                       st.integers(1, 4096)),
-             min_size=1, max_size=5),
-)
-def test_spec_invariants(mesh_i, dims):
+def _check_spec_invariants(mesh_i, dims):
     """For any shape/axes: (1) each mesh axis used at most once,
     (2) every assigned axis divides its dimension, (3) rank matches."""
     mesh = _FakeMesh(MESHES[mesh_i])
@@ -51,9 +55,7 @@ def test_spec_invariants(mesh_i, dims):
     assert len(used) == len(set(used)), used
 
 
-@settings(max_examples=100, deadline=None)
-@given(st.integers(1, 8), st.integers(1, 8))
-def test_trivial_mesh_never_shards(a, b):
+def _check_trivial_mesh_never_shards(a, b):
     mesh = _FakeMesh({"data": 1, "model": 1})
     spec = spec_for((a * 16, b * 16), ("batch", "heads"), mesh,
                     DEFAULT_RULES)
@@ -63,6 +65,51 @@ def test_trivial_mesh_never_shards(a, b):
         if part is not None:
             parts = part if isinstance(part, tuple) else (part,)
             assert all(mesh.shape[p] == 1 for p in parts)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.integers(0, len(MESHES) - 1),
+        st.lists(st.tuples(st.sampled_from(AXIS_NAMES + [None]),
+                           st.integers(1, 4096)),
+                 min_size=1, max_size=5),
+    )
+    def test_spec_invariants(mesh_i, dims):
+        _check_spec_invariants(mesh_i, dims)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 8), st.integers(1, 8))
+    def test_trivial_mesh_never_shards(a, b):
+        _check_trivial_mesh_never_shards(a, b)
+
+
+# Deterministic fallback sweep over the same invariants: every mesh x a
+# hand-picked set of awkward (axes, dims) lists (primes, ones, exact
+# multiples, multi-axis batch).
+FALLBACK_DIMS = [
+    [("batch", 256), (None, 4096)],
+    [("batch", 17)],
+    [("heads", 32), ("head_dim", 128)],
+    [("vocab", 4096), ("embed", 64)],
+    [("experts", 8), ("mlp", 2048), (None, 1)],
+    [("batch", 1), ("seq", 1), ("embed", 1)],
+    [("kv_heads", 8), ("head_dim", 128)],
+    [("batch", 4096), ("heads", 4095)],
+]
+
+
+@pytest.mark.parametrize("mesh_i", range(len(MESHES)))
+@pytest.mark.parametrize("dims", FALLBACK_DIMS,
+                         ids=[f"dims{i}" for i in range(len(FALLBACK_DIMS))])
+def test_spec_invariants_cases(mesh_i, dims):
+    _check_spec_invariants(mesh_i, dims)
+
+
+@pytest.mark.parametrize("a,b", [(1, 1), (3, 5), (8, 8)])
+def test_trivial_mesh_never_shards_cases(a, b):
+    _check_trivial_mesh_never_shards(a, b)
 
 
 def test_all_arch_params_shardable_on_production_mesh():
