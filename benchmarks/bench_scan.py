@@ -1,0 +1,91 @@
+"""Scan & segmented-reduction driver: the triangular-MMA subsystem the
+way bench_reduction drives the ones-MMA reduction.
+
+Sections (CSV via benchmarks.common.emit):
+
+  scan/engine/...        wall-clock per engine (tc_scan vs jnp.cumsum
+                         vs the Pallas kernel in interpret mode) over
+                         problem sizes — the scan twin of Fig. 7;
+  scan/chain/...         the chain-R sweep for the pure-JAX core (the
+                         scan analogue of the paper's Figs. 3/5 R grid);
+  scan/plan/...          the autotuned winner per (n, dtype) under
+                         op='scan' (what method='auto' dispatches);
+  segment/engine/...     segmented sum: mask contraction vs scatter-add
+                         vs the Pallas mask kernel;
+  segment/plan/...       autotuned winners under op='segment_sum'.
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_scan.py
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.core import autotune, scan as S
+from repro.kernels import mma_scan, mma_segment_sum
+
+SIZES = [1 << 12, 1 << 16, 1 << 20]
+CHAINS = (1, 2, 4)
+NUM_SEGMENTS = 128
+
+
+def _fmt(plan: autotune.ReductionPlan) -> str:
+    return (f"method={plan.method};variant={plan.variant};"
+            f"R={plan.chain};B={plan.block_rows};src={plan.source}")
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    for n in SIZES:
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        mma = jax.jit(lambda v: S.tc_scan(v))
+        vpu = jax.jit(lambda v: jnp.cumsum(v.astype(jnp.float32)))
+        emit(f"scan/engine/mma_chained/n={n}", time_us(mma, x), "R=4")
+        emit(f"scan/engine/vpu/n={n}", time_us(vpu, x), "jnp.cumsum")
+        if n <= 1 << 16:  # interpret mode: keep the pallas probe small
+            pal = lambda v: mma_scan(v, chain=2, block_rows=32)
+            emit(f"scan/engine/pallas/n={n}",
+                 time_us(pal, x, iters=3, warmup=1), "interpret")
+
+    n = SIZES[1]
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    for chain in CHAINS:
+        fn = jax.jit(lambda v, c=chain: S.tc_scan(v, chain=c))
+        emit(f"scan/chain/R={chain}/n={n}", time_us(fn, x),
+             f"model={autotune.model_cost(autotune.ReductionPlan(method='mma_chained', chain=chain), n, jnp.float32, op='scan'):.1f}")
+
+    reg = autotune.PlanRegistry()
+    for dtype in (jnp.float32, jnp.bfloat16):
+        for n in SIZES:
+            plan = autotune.get_plan(n, dtype, op="scan", registry=reg)
+            emit(f"scan/plan/n={n}/{jnp.dtype(dtype).name}", plan.cost,
+                 _fmt(plan))
+
+    for n in SIZES[:2]:
+        v = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        ids = jnp.asarray(rng.integers(0, NUM_SEGMENTS, n)
+                          .astype(np.int32))
+        mma = jax.jit(lambda a, b: S.tc_segment_reduce(a, b,
+                                                       NUM_SEGMENTS))
+        vpu = jax.jit(lambda a, b: jax.ops.segment_sum(
+            a, b, num_segments=NUM_SEGMENTS))
+        emit(f"segment/engine/mma/n={n}", time_us(mma, v, ids),
+             f"S={NUM_SEGMENTS}")
+        emit(f"segment/engine/vpu/n={n}", time_us(vpu, v, ids),
+             "scatter-add")
+        if n <= 1 << 12:
+            pal = lambda a, b: mma_segment_sum(a, b, NUM_SEGMENTS,
+                                               block_rows=8)
+            emit(f"segment/engine/pallas/n={n}",
+                 time_us(pal, v, ids, iters=3, warmup=1), "interpret")
+        plan = autotune.get_plan(n, jnp.float32, op="segment_sum",
+                                 registry=reg)
+        emit(f"segment/plan/n={n}", plan.cost, _fmt(plan))
+
+
+if __name__ == "__main__":
+    run()

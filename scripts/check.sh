@@ -1,11 +1,29 @@
 #!/usr/bin/env bash
-# CI-style tier-1 check: the canonical suite invocation (see ROADMAP.md).
+# CI-style tier-1 check: docs + doctests + the canonical suite
+# invocation (see ROADMAP.md).
 #
-#   scripts/check.sh            # full suite
+#   scripts/check.sh            # docs check, doctests, full suite
 #   scripts/check.sh -m 'not slow'   # fast lane (skips multi-device
 #                                    # subprocess tests); extra args are
 #                                    # passed straight to pytest
+#
+# Steps:
+#   docs     scripts/check_docs.py — markdown links/anchors resolve and
+#            every backticked `repro.*` symbol / repo path in README +
+#            docs/ maps to real code (broken cross-references fail
+#            tier-1 locally);
+#   doctest  pytest --doctest-modules over src/repro/core (the
+#            integration-hook examples);
+#   suite    python -m pytest -x -q (the ROADMAP tier-1 command).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== docs =="
+python scripts/check_docs.py
+
+echo "== doctest =="
+python -m pytest --doctest-modules src/repro/core -q
+
+echo "== suite =="
 exec python -m pytest -x -q "$@"

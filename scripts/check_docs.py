@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Docs link/anchor/symbol checker — the `docs` step of tier-1.
+
+Validates, over README.md and every markdown file under docs/:
+
+  1. relative markdown links resolve to existing files, and their
+     `#anchor` fragments match a real heading in the target file
+     (GitHub slug rules);
+  2. every backticked dotted symbol rooted at ``repro`` (e.g.
+     ``repro.core.scan.tc_scan``) imports and resolves via getattr —
+     the docs' paper-to-code map may only reference real code;
+  3. every backticked repo path (``src/repro/core/scan.py``,
+     ``benchmarks/bench_scan.py``, …) exists on disk (shorthand paths
+     are also tried under src/repro/).
+
+Exit status 0 iff everything resolves; failures are listed one per
+line.  Stdlib + the repo itself only — no new dependencies.
+
+Usage:  PYTHONPATH=src python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMBOL_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+PATH_RE = re.compile(r"`([\w./-]+/[\w.-]+\.(?:py|md|sh|json|txt))`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def doc_files() -> list[str]:
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return [f for f in out if os.path.exists(f)]
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, then map
+    every space to a dash (GitHub does NOT collapse runs, so
+    "Scan & segmented" -> "scan--segmented")."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    return {slugify(m) for m in HEADING_RE.findall(text)}
+
+
+def check_links(path: str, text: str, errors: list[str]) -> None:
+    base = os.path.dirname(path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = ""
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        dest = path if not target else os.path.normpath(
+            os.path.join(base, target))
+        if not os.path.exists(dest):
+            errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                          f"-> {target or '#' + frag}")
+            continue
+        if frag and dest.endswith(".md") and frag not in anchors_of(dest):
+            errors.append(f"{os.path.relpath(path, ROOT)}: missing "
+                          f"anchor -> {os.path.relpath(dest, ROOT)}"
+                          f"#{frag}")
+
+
+def check_symbols(path: str, text: str, errors: list[str]) -> None:
+    for sym in sorted(set(SYMBOL_RE.findall(text))):
+        parts = sym.split(".")
+        obj = None
+        # longest importable module prefix, then getattr the rest
+        for cut in range(len(parts), 0, -1):
+            try:
+                obj = importlib.import_module(".".join(parts[:cut]))
+                rest = parts[cut:]
+                break
+            except ImportError:
+                continue
+        else:
+            errors.append(f"{os.path.relpath(path, ROOT)}: unresolvable "
+                          f"symbol `{sym}` (no importable prefix)")
+            continue
+        for attr in rest:
+            if not hasattr(obj, attr):
+                errors.append(f"{os.path.relpath(path, ROOT)}: "
+                              f"unresolvable symbol `{sym}` "
+                              f"(`{attr}` not found)")
+                break
+            obj = getattr(obj, attr)
+
+
+def check_paths(path: str, text: str, errors: list[str]) -> None:
+    for p in sorted(set(PATH_RE.findall(text))):
+        cands = [os.path.join(ROOT, p),
+                 os.path.join(ROOT, "src", "repro", p)]
+        if not any(os.path.exists(c) for c in cands):
+            errors.append(f"{os.path.relpath(path, ROOT)}: missing "
+                          f"path `{p}`")
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    errors: list[str] = []
+    files = doc_files()
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        check_links(path, text, errors)
+        # strip fenced code blocks for symbol/path checks: JSON/py
+        # examples may show illustrative values, but inline backticks
+        # in prose are binding references.
+        prose = CODE_FENCE_RE.sub("", text)
+        check_symbols(path, prose, errors)
+        check_paths(path, prose, errors)
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"check_docs: {len(files)} files, {len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

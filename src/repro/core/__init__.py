@@ -1,6 +1,7 @@
 """Core: the paper's chained-MMA arithmetic reduction as a composable
-JAX module, plus its PRAM cost model, precision policy, and the hooks
-that make it a first-class service of the training/serving framework.
+JAX module, plus the triangular-MMA scan/segmented-reduction family,
+its PRAM cost model, precision policy, and the hooks that make it a
+first-class service of the training/serving framework.
 """
 
 from repro.core.reduction import (  # noqa: F401
@@ -8,12 +9,21 @@ from repro.core.reduction import (  # noqa: F401
     tc_reduce_lastdim,
     tc_reduce_rows,
 )
+from repro.core.scan import (  # noqa: F401
+    tc_cumprod,
+    tc_linear_recurrence,
+    tc_scan,
+    tc_segment_reduce,
+)
 from repro.core.integration import (  # noqa: F401
-    reduce_sum,
-    reduce_mean,
-    masked_mean,
-    squared_sum,
-    global_norm,
+    cumsum,
     expert_counts,
+    global_norm,
+    masked_cumsum,
+    masked_mean,
+    reduce_mean,
+    reduce_sum,
+    segment_sum,
+    squared_sum,
 )
 from repro.core import theory, precision  # noqa: F401

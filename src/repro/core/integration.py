@@ -68,6 +68,11 @@ def reduce_sum(x, *, method: Method = "mma", chain: int = 4) -> jax.Array:
     from the autotuner; 'mma' uses the ones-contraction form
     (distribution-safe); the explicitly-chained tc_reduce and the Pallas
     kernel are the paper-structured single-device paths.
+
+    >>> float(reduce_sum(jnp.ones((2, 8))))
+    16.0
+    >>> float(reduce_sum(jnp.arange(4.0), method="vpu"))
+    6.0
     """
     if method == "auto":
         plan = autotune.get_plan(x.size, x.dtype, op="reduce_sum",
@@ -95,7 +100,15 @@ def masked_mean(values, mask, *, method: Method = "mma") -> jax.Array:
     In 'mma' form the numerator is a *single* contraction <values, mask>
     (the mask plays the ones-matrix role), and the denominator is
     <mask, ones>.  'auto' keeps that fused form when the plan picks the
-    contraction engine, otherwise reduces values*mask under the plan."""
+    contraction engine, otherwise reduces values*mask under the plan.
+
+    >>> v = jnp.asarray([1.0, 2.0, 30.0, 40.0])
+    >>> m = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    >>> float(masked_mean(v, m))
+    1.5
+    >>> float(masked_mean(v, jnp.zeros(4)))  # all-masked: denom floor 1
+    0.0
+    """
     mask = mask.astype(values.dtype)
     if method == "auto":
         plan = autotune.get_plan(values.size, values.dtype,
@@ -143,6 +156,102 @@ def global_norm(tree, *, method: Method = "mma") -> jax.Array:
     total = functools.reduce(
         jnp.add, [squared_sum(l, method=method) for l in leaves])
     return jnp.sqrt(total)
+
+
+def _scan_auto_engine(x, axis: int):
+    """Engine restriction for the scan-family 'auto' hooks.
+
+    The Pallas scan kernel owns only the flattened-1D single-device hot
+    path; batched/multi-axis scans go to the pure-JAX triangular-MMA
+    core (which reshapes nothing but the scan axis, so batch shardings
+    survive) or the VPU baseline.  Under a live multi-device mesh the
+    Pallas engine is excluded for the same flatten-and-pad reasons as
+    in ``_auto_engine``.
+    """
+    from repro.distributed import sharding as shd
+    mesh = shd.current_mesh()
+    multi = mesh is not None and math.prod(mesh.devices.shape) > 1
+    if multi or x.ndim > 1:
+        return ("mma_chained", "vpu")
+    return None
+
+
+def cumsum(x, *, axis: int = -1, inclusive: bool = True,
+           method: Method = "mma", chain: int = 4,
+           precision=None) -> jax.Array:
+    """Prefix sum along ``axis``, f32, same shape.
+
+    'mma'/'mma_chained' run the chained triangular-MMA scan
+    (``repro.core.scan.tc_scan`` — the Dakkak-style tensor-core scan);
+    'pallas' the hand-tiled kernel (flattened-1D inputs); 'vpu' the
+    classic ``jnp.cumsum`` baseline; 'auto' dispatches the plan the
+    registry tuned for (op='scan', n, dtype, backend).
+    ``inclusive=False`` gives the exclusive scan (leading zero).
+    ``precision`` reaches the MMA engines (pin
+    ``jax.lax.Precision.HIGHEST`` for integer-exact prefixes on TPU).
+    """
+    from repro.core import scan as S
+    if method == "auto":
+        plan = autotune.get_plan(x.shape[axis], x.dtype, op="scan",
+                                 engine=_scan_auto_engine(x, axis))
+        return autotune.execute_scan_plan(x, plan, axis=axis,
+                                          inclusive=inclusive)
+    if method in ("mma", "mma_chained"):
+        return S.tc_scan(x, axis=axis, inclusive=inclusive, chain=chain,
+                         precision=precision)
+    if method == "pallas":
+        plan = autotune.ReductionPlan(method="pallas", chain=chain)
+        return autotune.execute_scan_plan(x, plan, axis=axis,
+                                          inclusive=inclusive)
+    if method == "vpu":
+        return autotune._vpu_scan(x, axis=axis, inclusive=inclusive)
+    raise ValueError(f"unknown scan method: {method!r}")
+
+
+def masked_cumsum(values, mask, *, axis: int = -1,
+                  inclusive: bool = True,
+                  method: Method = "mma") -> jax.Array:
+    """Prefix sum of ``values`` where ``mask == 1`` (masked-out
+    positions contribute 0 but still receive the running prefix) — the
+    packed-position / token-budget scan.  f32, same shape."""
+    masked = values.astype(jnp.float32) * mask.astype(jnp.float32)
+    if method == "auto":
+        plan = autotune.get_plan(masked.shape[axis], masked.dtype,
+                                 op="masked_cumsum",
+                                 engine=_scan_auto_engine(masked, axis))
+        return autotune.execute_scan_plan(masked, plan, axis=axis,
+                                          inclusive=inclusive)
+    return cumsum(masked, axis=axis, inclusive=inclusive, method=method)
+
+
+def segment_sum(values, segment_ids, num_segments: int, *,
+                method: Method = "mma") -> jax.Array:
+    """Segmented sum: out[s] = sum of values where segment_ids == s.
+
+    'mma' contracts against the one-hot segment matrix (block-diagonal
+    for sorted ids — ``repro.core.scan.tc_segment_reduce``); 'pallas'
+    builds the mask in-kernel; 'vpu' is the ``jax.ops.segment_sum``
+    scatter-add baseline; 'auto' consults the registry under
+    op='segment_sum'.  Empty segments are 0.  (num_segments,) f32.
+    """
+    if method == "auto":
+        plan = autotune.get_plan(values.size, values.dtype,
+                                 op="segment_sum",
+                                 engine=_auto_engine())
+        return autotune.execute_segment_plan(values, segment_ids,
+                                             num_segments, plan)
+    if method in ("mma", "mma_chained"):
+        from repro.core import scan as S
+        return S.tc_segment_reduce(values, segment_ids, num_segments)
+    if method == "pallas":
+        from repro.kernels import mma_segment_sum
+        return mma_segment_sum(values, segment_ids, num_segments)
+    if method == "vpu":
+        import jax.ops
+        return jax.ops.segment_sum(
+            jnp.ravel(values).astype(jnp.float32),
+            jnp.ravel(segment_ids), num_segments=num_segments)
+    raise ValueError(f"unknown segment_sum method: {method!r}")
 
 
 def expert_counts(router_probs_onehot, *, method: Method = "mma"):

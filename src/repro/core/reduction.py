@@ -84,6 +84,10 @@ def tc_reduce(x, *, variant: Variant = "single_pass",
               keep_f32_partials: bool = True) -> jax.Array:
     """Arithmetic reduction R(X) via chained ones-MMAs. Returns f32 scalar.
 
+    Default geometry: ``chain=4`` (the paper's experimentally-best R on
+    small blocks, Figs. 3/5) and ``m=128`` (``DEFAULT_M``, the TPU MXU
+    tile — the analogue of the paper's m=4 hardware / m=16 wmma tile);
+    the default ``variant='single_pass'`` is the paper's chosen variant.
     ``chain='auto'`` resolves the chain length from the autotuner's plan
     registry for this (n, dtype, backend) instead of a call-site
     constant (resolution uses only trace-time shape/dtype info, so it is

@@ -1,0 +1,311 @@
+"""Prefix scans and segmented reductions as chained triangular MMAs.
+
+The paper encodes the reduction of ``n`` numbers as chains of m x m
+ones-MMAs; Dakkak et al. ("Accelerating Reduction and Scan Using Tensor
+Core Units") show the same trick extends to *prefix sums*: multiplying a
+row tile by an upper-triangular one-matrix computes every prefix of the
+tile in a single MMA,
+
+    P = X x U_m,        U_m[i, j] = 1  iff  i <= j
+    (left-multiplying a column tile by the lower-triangular L_m = U_m^T
+    is the same encoding transposed),
+
+and segmented sums are MMAs against block-diagonal 0/1 masks (the
+one-hot segment matrix), generalising the all-ones matrix of the plain
+reduction.  This module is the pure-``jax.lax`` core of that subsystem —
+safe under ``jit``/``pjit``/``shard_map``, lowered to the MXU on TPU —
+mirroring ``repro.core.reduction``; the hand-tiled Pallas twin lives in
+``repro.kernels.mma_scan``.
+
+Geometry (mirrors ``tc_reduce``): the scan axis is zero-padded to a
+multiple of ``chain * m`` and viewed as groups of ``chain`` rows of
+``m`` elements:
+
+    x -> (..., G, chain, m)
+    P       = X x U_m                  (per-row inclusive prefix MMA)
+    c       = t x U'_chain             (intra-group carries, strict-
+                                        upper triangular MMA over the
+                                        chain's row totals t)
+    g-carry = exclusive scan of the per-group totals (f32 combine for
+              ``variant='single_pass'``; recursive MMA levels for
+              ``variant='recurrence'``)
+
+Precision contract: identical to the reduction family — every partial
+(P, c, carries) is an f32 accumulator regardless of the input dtype, and
+all public functions return f32.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reduction import DEFAULT_M, Variant
+
+# Floor for log-space inputs: finite stand-in for log(0).  Any prefix
+# that includes it underflows to 0 after exp (exp(-1e4) == 0 in f32),
+# while staying finite so the triangular MMA never multiplies 0 * inf.
+_LOG_FLOOR = -1.0e4
+
+
+def _triu_ones(k: int, dtype, *, strict: bool = False) -> jax.Array:
+    """Upper-triangular one-matrix U_k (strictly upper when ``strict``).
+
+    Right-multiplying a row tile by U_k computes its inclusive prefix
+    sums; the strict form gives exclusive prefixes (used for the
+    intra-group carries).
+    """
+    u = jnp.triu(jnp.ones((k, k), dtype=dtype), k=1 if strict else 0)
+    return u
+
+
+def _shift_exclusive(incl, x_dtype=None):
+    """Inclusive -> exclusive along the last axis by shifting in a zero.
+
+    Implemented as a shift (not ``incl - x``) so log-space scans with
+    ``-inf``-like floors never produce ``inf - inf`` NaNs.
+    """
+    zeros = jnp.zeros(incl.shape[:-1] + (1,), incl.dtype)
+    return jnp.concatenate([zeros, incl[..., :-1]], axis=-1)
+
+
+def tc_scan(x, *, axis: int = -1, inclusive: bool = True,
+            variant: Variant = "single_pass",
+            chain: int | str = 4, m: int = DEFAULT_M,
+            precision=None) -> jax.Array:
+    """Prefix sum along ``axis`` via chained triangular MMAs. Returns f32.
+
+    ``precision`` is forwarded to the MMA einsums.  The default follows
+    the paper's mixed-precision contract (low-precision multiplicands,
+    f32 accumulators — on TPU the MXU truncates f32 operands to bf16);
+    pass ``jax.lax.Precision.HIGHEST`` when the scanned values must
+    survive the multiplicand rounding, e.g. integer-exact prefix
+    offsets (the MoE dispatch path).
+
+    The scan axis is tiled into groups of ``chain`` rows of ``m``
+    elements; every other axis is a batch axis and is left exactly as
+    the caller (and the partitioner) laid it out — only the scan axis is
+    reshaped, so batch shardings survive (scanning *along* a sharded
+    axis is the caller's responsibility).
+
+    ``chain='auto'`` resolves the group length from the autotuner's plan
+    registry for this (n, dtype, backend) under ``op='scan'``
+    (trace-time shape/dtype only, so it is jit-safe).
+
+    variant='single_pass': one triangular-MMA level; the per-group
+      totals are combined with an f32 vector scan (the atomics-stage
+      analogue — partials never leave f32).
+    variant='recurrence': the per-group totals are *re-fed* to tc_scan
+      until one group remains — MMA levels all the way down (Dakkak et
+      al.'s multi-level scan).
+
+    ``inclusive=False`` returns the exclusive scan (prefix shifted right
+    with a leading zero).
+    """
+    if chain == "auto":
+        from repro.core import autotune
+        chain = autotune.get_plan(x.shape[axis], x.dtype, op="scan",
+                                  engine="mma_chained").chain
+    return _tc_scan_impl(x, axis=axis, inclusive=inclusive,
+                         variant=variant, chain=int(chain), m=m,
+                         precision=precision)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "axis", "inclusive", "variant", "chain", "m", "precision"))
+def _tc_scan_impl(x, *, axis: int, inclusive: bool, variant: Variant,
+                  chain: int, m: int, precision=None) -> jax.Array:
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        # integer inputs (e.g. MoE expert counts) ride the f32
+        # multiplicands; exact below 2^24 per the precision contract.
+        x = x.astype(jnp.float32)
+    x = jnp.moveaxis(x, axis, -1)
+    s = x.shape[-1]
+    lead = x.shape[:-1]
+
+    per_group = chain * m
+    g = int(math.ceil(max(s, 1) / per_group))
+    padded = g * per_group
+    if padded != s:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, padded - s)])
+    tiles = x.reshape(*lead, g, chain, m)
+
+    # P = X x U_m: per-row inclusive prefix, one triangular MMA per row.
+    u_m = _triu_ones(m, tiles.dtype)
+    p = jnp.einsum("...i,ij->...j", tiles, u_m,
+                   preferred_element_type=jnp.float32,
+                   precision=precision)
+
+    # Intra-group carries: strict-upper triangular MMA over row totals.
+    t = p[..., -1]                                    # (..., G, chain)
+    u_c = _triu_ones(chain, jnp.float32, strict=True)
+    c = jnp.einsum("...i,ij->...j", t, u_c,
+                   preferred_element_type=jnp.float32,
+                   precision=precision)
+
+    # Exclusive carry across groups.
+    gt = c[..., -1] + t[..., -1]                      # (..., G)
+    if g == 1:
+        gc = jnp.zeros_like(gt)
+    elif variant == "single_pass":
+        gc = _shift_exclusive(jnp.cumsum(gt, axis=-1))
+    elif variant == "recurrence":
+        gc = _tc_scan_impl(gt, axis=-1, inclusive=False,
+                           variant="recurrence", chain=chain, m=m,
+                           precision=precision)
+    else:
+        raise ValueError(f"unknown variant: {variant!r}")
+
+    out = p + c[..., None] + gc[..., None, None]
+    out = out.reshape(*lead, padded)[..., :s]
+    if not inclusive:
+        out = _shift_exclusive(out)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def tc_cumprod(x, *, axis: int = -1, inclusive: bool = True,
+               variant: Variant = "single_pass",
+               chain: int | str = 4, m: int = DEFAULT_M) -> jax.Array:
+    """Cumulative product of non-negative ``x`` via a log-space tc_scan.
+
+    ``prod = exp(scan(log x))`` — the multiplicative recurrences of the
+    model zoo (RWKV prefix decays, rgLRU gates) have factors in [0, 1],
+    so the log-space sum is monotone non-increasing and overflow-free.
+    Exact zeros are handled by flooring ``log x`` at a finite constant
+    whose exp underflows to 0, so the triangular MMA never sees an
+    infinity.  Returns f32.
+    """
+    logs = jnp.maximum(jnp.log(x.astype(jnp.float32)), _LOG_FLOOR)
+    ls = tc_scan(logs, axis=axis, inclusive=inclusive, variant=variant,
+                 chain=chain, m=m)
+    return jnp.exp(ls)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def tc_linear_recurrence(log_a, b, h0, *, chunk: int = 16):
+    """First-order linear recurrence  h_t = a_t h_{t-1} + b_t  as
+    chunked triangular MMAs.
+
+    Arguments are (B, S, W) tensors of per-channel log-decays and
+    inputs, with an (B, W) initial state; the decay is passed in log
+    space (``a_t = exp(log_a_t)``, ``log_a <= 0``) because every
+    consumer in this repo (rgLRU, RWKV decays) already has the log form.
+
+    Within a chunk of ``c`` steps the recurrence is *densified* into a
+    per-channel lower-triangular decay matrix
+
+        L[t, s] = exp(ca_t - ca_s)   for s <= t,   ca = tc_scan(log_a)
+
+    (entries in (0, 1] — the subtraction happens in log space where it
+    is exact and never overflows) and solved with one batched matmul
+    ``h_local = L x b`` on the matrix unit.  Chunk boundary states
+    propagate through a length-S/c carry scan, exactly like the
+    reduction's single-pass combine.  Returns ``(h, h_final)`` in f32:
+    (B, S, W) states and the (B, W) final state.
+    """
+    B, S, W = log_a.shape
+    c = int(chunk)
+    la = jnp.maximum(log_a.astype(jnp.float32), _LOG_FLOOR)
+    bf = b.astype(jnp.float32)
+    nc = int(math.ceil(max(S, 1) / c))
+    pad = nc * c - S
+    if pad:
+        # a = 1, b = 0 padding: the state is constant through the tail.
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+    la = la.reshape(B, nc, c, W)
+    bf = bf.reshape(B, nc, c, W)
+
+    # ca_t = sum_{u<=t} log a_u within the chunk (triangular-MMA scan).
+    ca = tc_scan(la, axis=2, chain=1, m=min(DEFAULT_M, max(c, 8)))
+
+    def _local_solve(ca_, bf_):
+        # L[t, s] = exp(ca_t - ca_s), lower triangular (s <= t).
+        diff = ca_[:, :, :, None, :] - ca_[:, :, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        l_mat = jnp.exp(jnp.where(tri[None, None, :, :, None], diff,
+                                  _LOG_FLOOR))
+        return jnp.einsum("bntsw,bnsw->bntw", l_mat, bf_,
+                          preferred_element_type=jnp.float32)
+
+    # The densified (B, nc, c, c, W) decay matrix is chunk x the input
+    # size — rematerialise it in the backward pass instead of saving
+    # it, so adopting the MMA form does not multiply step memory.
+    h_local = jax.checkpoint(_local_solve)(ca, bf)
+
+    # Chunk-boundary carry scan: h_in_{k+1} = D_k h_in_k + local_last_k.
+    decay = jnp.exp(ca[:, :, -1, :])                  # (B, nc, W)
+    last = h_local[:, :, -1, :]                       # (B, nc, W)
+
+    def step(h_in, inp):
+        d_k, l_k = inp
+        return d_k * h_in + l_k, h_in                 # emit incoming
+
+    h_final, h_in = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(last, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                   # (B, nc, W)
+
+    # Each token adds its decayed view of the chunk's incoming state.
+    h = h_local + jnp.exp(ca) * h_in[:, :, None, :]
+    return h.reshape(B, nc * c, W)[:, :S, :], h_final
+
+
+# Mask-matrix memory ceiling for the one-shot segment contraction: the
+# (block, num_segments) f32 one-hot tile is kept under this many bytes.
+_MASK_BUDGET = 32 * 2**20
+
+
+def tc_segment_reduce(values, segment_ids, num_segments: int, *,
+                      m: int = DEFAULT_M) -> jax.Array:
+    """Segmented sum as MMAs against block-diagonal 0/1 masks.
+
+    ``out[s] = sum of values where segment_ids == s`` — the one-hot
+    segment matrix E (E[i, s] = 1 iff segment_ids[i] == s) generalises
+    the paper's all-ones matrix: for contiguous (sorted) segments E is
+    block diagonal, and the contraction ``values^T x E`` is exactly the
+    chained ones-MMA of each block.  Unsorted ids are supported (E is
+    then a permuted block matrix — same contraction).
+
+    The mask tile is materialised in bounded blocks so the encoding
+    streams over arbitrarily large inputs (one compiled block step via
+    ``lax.scan``, not an unrolled trace).  Empty segments yield 0.
+    Returns (num_segments,) f32.
+    """
+    flat = jnp.ravel(values)
+    if not jnp.issubdtype(flat.dtype, jnp.floating):
+        flat = flat.astype(jnp.float32)
+    ids = jnp.ravel(segment_ids)
+    n = flat.shape[0]
+    if n == 0 or num_segments == 0:
+        return jnp.zeros((num_segments,), jnp.float32)
+    # Block sized so the (block, S) f32 mask honours the budget even
+    # for huge segment counts (floor of 1 row, not a full m-tile).
+    block = min(n, max(1, (_MASK_BUDGET // 4) // max(num_segments, 1)))
+    seg_iota = jnp.arange(num_segments, dtype=ids.dtype)
+
+    def contract(v, i):
+        mask = (i[:, None] == seg_iota[None, :]).astype(v.dtype)
+        return jax.lax.dot_general(
+            v, mask, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    nb = int(math.ceil(n / block))
+    if nb == 1:
+        return contract(flat, ids)
+    pad = nb * block - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        ids = jnp.pad(ids, (0, pad), constant_values=-1)  # matches none
+
+    def body(acc, inp):
+        v, i = inp
+        return acc + contract(v, i), None
+
+    out, _ = jax.lax.scan(
+        body, jnp.zeros((num_segments,), jnp.float32),
+        (flat.reshape(nb, block), ids.reshape(nb, block)))
+    return out

@@ -34,8 +34,41 @@ def speedup(m: int = 128) -> float:
 
 
 def speedup_chained(n: float, m: int = 128, chain: int = 1) -> float:
-    """T(n) / T^R_tc(n) for finite n."""
+    """Finite-n speedup of the chained variant: T(n) / T^R_tc(n).
+
+    The paper's abstract states the asymptotic bound for the two-MMA
+    encoding (chain R = 1): the tensor-core reduction is
+
+        S = (4/5) * log2(m^2)
+
+    times faster than the classic 4 log2 n parallel reduction — an
+    n-independent constant (Eq. 17, ``speedup``), e.g. 3.2x at the GPU
+    hardware tile m = 4 and 11.2x at the TPU MXU tile m = 128.  This
+    function evaluates the same ratio at finite n and general R, where
+    T^R_tc(n) = (2R+3) log_{Rm^2} n (Eq. 24): as n grows it converges
+    to (4 log2(R m^2)) / (2R+3), which at R = 1 is exactly the
+    abstract's (4/5) log2 m^2 bound.
+    """
     return t_classic(n) / t_tc_chained(n, m=m, chain=chain)
+
+
+def t_tc_scan(n: float, m: int = 128, chain: int = 1) -> float:
+    """Chained triangular-MMA prefix-scan depth (model extension).
+
+    Not a paper equation — the scan analogue of Eq. 24, after Dakkak et
+    al.'s TCU scan: each level folds R m-element rows per group with R
+    triangular MMAs (the per-row prefixes), one strict-triangular MMA
+    for the intra-group carries, and 2 steps of f32 carry combine, and
+    a level maps n -> n / (R m) values, so
+
+        T^R_scan(n) = (2R + 4) log_{R m} n.
+
+    Note the level fan-in is R*m (one prefix row per MMA), not the
+    reduction's R*m^2: a scan must *keep* every prefix, so each MMA
+    folds one row, not a full m x m tile.
+    """
+    base = max(chain * m, 2)
+    return (2.0 * chain + 4.0) * math.log(max(n, 2.0), base)
 
 
 def optimal_chain(n: float, m: int = 128, max_chain: int = 64) -> int:
@@ -73,6 +106,35 @@ def op_count(n: int, m: int = 128, chain: int = 4,
     vpu = 0
     if variant == "single_pass":
         vpu = groups  # f32 adds of per-group scalars (atomics analogue)
+    elif variant == "recurrence":
+        g = groups
+        while g > 1:
+            g = max(1, math.ceil(g / per_group))
+            mma += g * (chain + 1)
+    return OpCount(
+        mma_ops=mma,
+        mxu_flops=mma * 2 * m * m * m,
+        useful_flops=max(n - 1, 0),
+        vpu_flops=vpu,
+    )
+
+
+def op_count_scan(n: int, m: int = 128, chain: int = 4,
+                  variant: str = "single_pass") -> OpCount:
+    """Operation accounting for one tc_scan call (triangular MMAs).
+
+    Per group of R m-element rows: R row-prefix MMAs (X x U_m) plus one
+    intra-group carry MMA (t x U'_R); the cross-group carries cost
+    either G f32 vector adds (single_pass) or recursive MMA levels over
+    G totals (recurrence).  A prefix sum needs n - 1 useful adds to
+    produce all n outputs from its inclusive recurrence.
+    """
+    per_group = chain * m
+    groups = max(1, math.ceil(n / per_group))
+    mma = groups * (chain + 1)
+    vpu = 0
+    if variant == "single_pass":
+        vpu = groups
     elif variant == "recurrence":
         g = groups
         while g > 1:

@@ -10,6 +10,10 @@ a counter-based PRNG (stateless in ``step``), so
     its slice of the global batch and device_put's it to the mesh.
 
 A background prefetch thread overlaps batch synthesis with the step.
+``RunningStats`` tracks stream-level statistics (token budgets,
+cumulative counts) on the chained-MMA fast path, and ``with_positions``
+derives packed position ids from the mask with the triangular-MMA
+prefix scan (``repro.core.integration.masked_cumsum``).
 """
 
 from __future__ import annotations
@@ -22,13 +26,77 @@ import jax
 import numpy as np
 
 
+class RunningStats:
+    """Streaming statistics over the batch stream, on the MMA fast path.
+
+    Per-step scalars (valid-token count, mask density) are reduced with
+    the paper's ones-MMA encoding (``integration.reduce_sum``), and the
+    cross-step cumulative token budget is a triangular-MMA prefix scan
+    (``integration.cumsum``) over the recorded history — the
+    data-pipeline consumer of the scan subsystem.  All accumulators
+    follow the f32 precision contract.
+    """
+
+    def __init__(self, *, method: str = "mma"):
+        self.method = method
+        self._tokens_per_step: list[float] = []
+
+    @property
+    def steps(self) -> int:
+        return len(self._tokens_per_step)
+
+    def update(self, batch: dict) -> float:
+        """Record one batch; returns its valid-token count."""
+        from repro.core import integration as ci
+        mask = jax.numpy.asarray(batch["mask"])
+        tokens = float(ci.reduce_sum(mask, method=self.method))
+        self._tokens_per_step.append(tokens)
+        return tokens
+
+    def cumulative_tokens(self) -> np.ndarray:
+        """Inclusive running token budget after each recorded step."""
+        from repro.core import integration as ci
+        if not self._tokens_per_step:
+            return np.zeros((0,), np.float32)
+        hist = jax.numpy.asarray(np.asarray(self._tokens_per_step,
+                                            np.float32))
+        return np.asarray(ci.cumsum(hist, method=self.method))
+
+    def summary(self) -> dict:
+        """Totals + mean/std of tokens-per-step (f32 accumulators)."""
+        from repro.core import integration as ci
+        if not self._tokens_per_step:
+            return {"steps": 0, "total_tokens": 0.0,
+                    "mean_tokens": 0.0, "std_tokens": 0.0}
+        hist = jax.numpy.asarray(np.asarray(self._tokens_per_step,
+                                            np.float32))
+        total = float(ci.reduce_sum(hist, method=self.method))
+        mean = total / self.steps
+        sq = float(ci.squared_sum(hist, method=self.method))
+        var = max(sq / self.steps - mean * mean, 0.0)
+        return {"steps": self.steps, "total_tokens": total,
+                "mean_tokens": mean, "std_tokens": float(np.sqrt(var))}
+
+
+def mask_positions(mask) -> jax.Array:
+    """Packed position ids from a (B, S) mask: each valid token's index
+    among the valid tokens of its row — an exclusive masked prefix scan
+    on the triangular-MMA path.  int32, same shape."""
+    from repro.core import integration as ci
+    pos = ci.masked_cumsum(jax.numpy.ones_like(mask), mask,
+                           axis=-1, inclusive=False, method="mma")
+    return pos.astype(jax.numpy.int32)
+
+
 class SyntheticLMData:
     def __init__(self, cfg, shape_cfg, *, seed: int = 0,
-                 sharding: Optional[jax.sharding.NamedSharding] = None):
+                 sharding: Optional[jax.sharding.NamedSharding] = None,
+                 with_positions: bool = False):
         self.cfg = cfg
         self.shape = shape_cfg
         self.seed = seed
         self.sharding = sharding
+        self.with_positions = with_positions
 
     def _rng(self, step: int) -> np.random.Generator:
         return np.random.default_rng(
@@ -60,6 +128,9 @@ class SyntheticLMData:
         if self.cfg.is_encdec:
             batch["src_embeds"] = rng.standard_normal(
                 (b, s, cfg.d_model)).astype(np.float32)
+        if self.with_positions:
+            batch["positions"] = np.asarray(
+                mask_positions(jax.numpy.asarray(batch["mask"])))
         return self._put(batch)
 
     def _put(self, batch):

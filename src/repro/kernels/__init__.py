@@ -8,6 +8,8 @@ from repro.kernels.ops import (  # noqa: F401
     mma_reduce,
     mma_reduce_partials,
     mma_rmsnorm,
+    mma_scan,
+    mma_segment_sum,
     mma_squared_sum,
     MXU_M,
 )

@@ -1,0 +1,147 @@
+"""Chained triangular-MMA scan / segmented-sum kernels (Pallas / TPU).
+
+TPU-native adaptation of the scan encoding of Dakkak et al.
+("Accelerating Reduction and Scan Using Tensor Core Units") on top of
+the chained-MMA machinery of Navarro et al. (2020):
+
+    P   = X x U_m          (per-row inclusive prefix: triangular MMA)
+    c   = L' x t           (row carries inside a tile: strictly lower-
+                            triangular MMA over the tile's row totals)
+    out = P + c + carry    (carry = running total of previous tiles)
+
+The grid walks row-tiles of the (T, m) input sequentially; ``carry`` is
+a persistent (1, 1) f32 VMEM scratch standing in for the GPU scan's
+cross-block look-back, exactly like ``mma_reduce_kernel``'s accumulator
+stands in for cross-block atomics.  A grid step owns a
+``(chain * block_rows, m)`` tile and folds its ``chain`` sub-tiles in
+sequence (the R-chain).
+
+The segmented-sum kernel reduces each tile against the one-hot segment
+matrix built in-kernel from the ids tile — an MMA against a
+block-diagonal 0/1 mask, generalising the ones-MMA of the reduction.
+
+All partials are f32, matching the reduction family's precision
+contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _triu_ones(k: int, dtype, *, strict: bool = False):
+    """U_k built from 2D iotas (TPU requires >= 2D iota)."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
+    return ((rows < cols) if strict else (rows <= cols)).astype(dtype)
+
+
+def _scan_tile(tile, carry_in):
+    """Inclusive prefix of one (rows, m) tile in row-major order.
+
+    Returns (prefix, tile_total): the (rows, m) f32 prefix including
+    ``carry_in`` and the tile's own f32 total.  Two triangular MMAs:
+    P = X x U_m, then row carries via the strictly-lower L' x t.
+    """
+    rows, m = tile.shape
+    u_m = _triu_ones(m, tile.dtype)
+    p = jnp.dot(tile, u_m, preferred_element_type=jnp.float32)
+    t = p[:, -1:]                                       # (rows, 1) totals
+    l_strict = _triu_ones(rows, jnp.float32, strict=True).T
+    c = jnp.dot(l_strict, t, preferred_element_type=jnp.float32)
+    total = c[-1:, :] + t[-1:, :]                       # (1, 1)
+    return p + c + carry_in, total
+
+
+def mma_scan_kernel(x_ref, o_ref, carry_ref, *, chain: int,
+                    block_rows: int):
+    """Single-pass chained triangular-MMA scan over a (T, m) layout.
+
+    Each grid step scans its ``chain`` (block_rows, m) sub-tiles in
+    sequence, threading the running carry; ``carry_ref`` persists the
+    carry across grid steps (sequential grid).
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    carry = carry_ref[0, 0]
+    for r in range(chain):
+        tile = x_ref[r * block_rows:(r + 1) * block_rows, :]
+        p, total = _scan_tile(tile, carry)
+        o_ref[r * block_rows:(r + 1) * block_rows, :] = p
+        carry = carry + total[0, 0]
+    carry_ref[0, 0] = carry
+
+
+def mma_segment_sum_kernel(v_ref, ids_ref, o_ref, acc_ref, *,
+                           num_segments: int):
+    """Segmented sum: each grid step folds its (rows, m) tile into a
+    (1, S) f32 accumulator with one MMA against the one-hot segment
+    matrix built from the ids tile.  Padded slots carry id -1 and match
+    no segment column."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows, m = v_ref.shape
+    v_flat = v_ref[...].reshape(1, rows * m)
+    ids_flat = ids_ref[...].reshape(rows * m, 1)
+    seg = jax.lax.broadcasted_iota(jnp.int32, (rows * m, num_segments), 1)
+    onehot = (ids_flat == seg).astype(v_flat.dtype)
+    acc_ref[...] += jnp.dot(v_flat, onehot,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...]
+
+
+def scan_call(x2d, *, chain: int, block_rows: int,
+              interpret: bool = False):
+    """pallas_call wrapper: (G*chain*block_rows, m) -> same-shape f32
+    row-major inclusive prefix."""
+    rows, m = x2d.shape
+    tile_rows = chain * block_rows
+    grid = rows // tile_rows
+    assert grid * tile_rows == rows, (rows, tile_rows)
+    kernel = functools.partial(mma_scan_kernel, chain=chain,
+                               block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile_rows, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_rows, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+
+
+def segment_sum_call(v2d, ids2d, *, num_segments: int, block_rows: int,
+                     interpret: bool = False):
+    """pallas_call wrapper: (G*block_rows, m) values+ids -> (1, S) f32."""
+    rows, m = v2d.shape
+    grid = rows // block_rows
+    assert grid * block_rows == rows, (rows, block_rows)
+    kernel = functools.partial(mma_segment_sum_kernel,
+                               num_segments=num_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, num_segments), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, num_segments), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, num_segments), jnp.float32)],
+        interpret=interpret,
+    )(v2d, ids2d)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import mma_reduce as _mr
 from repro.kernels import mma_rmsnorm as _rn
+from repro.kernels import mma_scan as _ms
 
 MXU_M = _mr.MXU_M
 
@@ -58,15 +59,22 @@ def mma_reduce(x, *, variant: str = "single_pass", chain=4,
     """Sum all elements of ``x`` via chained ones-MMAs. Returns f32 scalar.
 
     ``chain``/``block_rows`` accept 'auto' to resolve the tile geometry
-    from the autotuner's plan registry for this (n, dtype, backend).
+    from the autotuner's plan registry for this (n, dtype, backend);
+    integer values are the paper's explicit R (chain length) and B
+    (rows per VMEM sub-tile) knobs.  Defaults: chain=4, block_rows=128,
+    m=128 (the MXU tile).
 
-    variant:
+    ``variant`` must be one of exactly these three strings:
       'single_pass'  one kernel pass, sequential-grid f32 VMEM accumulator
-                     (paper §5.2 — the paper's chosen variant).
+                     (paper §5.2 — the paper's chosen variant; ignores
+                     ``mma_fraction``).
       'recurrence'   multi-pass: each pass maps n -> n/(chain*block_rows*m)
                      partials until one tile remains (paper §5.1 / Alg. 1).
       'split'        fraction ``mma_fraction`` of every tile on the MXU,
-                     remainder on the VPU (paper §5.3).
+                     remainder on the VPU (paper §5.3; ignores ``chain``
+                     — the tile is (block_rows, m) and the split is
+                     within it).
+    Any other value raises ``ValueError``.
     """
     chain, block_rows = _resolve_auto(x, chain, block_rows,
                                       op="reduce_sum")
@@ -136,6 +144,84 @@ def mma_reduce_partials(x, *, chain: int = 4, block_rows: int = 128,
     parts = _mr.partials_call(x2d, chain=chain, block_rows=block_rows,
                               interpret=itp)
     return parts[:, 0]
+
+
+def mma_scan(x, *, inclusive: bool = True, chain=4, block_rows=128,
+             m: int = MXU_M, interpret=None) -> jax.Array:
+    """Prefix sum of the *flattened* ``x`` via triangular MMAs (Pallas).
+
+    Returns the f32 inclusive (or exclusive) prefix in ``x``'s original
+    shape, scanning in row-major flattened order — the kernel twin of
+    ``repro.core.scan.tc_scan`` over a single axis.  For multi-axis /
+    batched scans use the pure-JAX core; this kernel owns the 1D
+    single-device hot path.  ``chain``/``block_rows`` accept 'auto'
+    (autotuned plan registry, op='scan').
+    """
+    chain, block_rows = _resolve_auto(x, chain, block_rows, op="scan")
+    return _mma_scan_impl(x, inclusive=inclusive, chain=chain,
+                          block_rows=block_rows, m=m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "inclusive", "chain", "block_rows", "m", "interpret"))
+def _mma_scan_impl(x, *, inclusive: bool, chain: int, block_rows: int,
+                   m: int, interpret) -> jax.Array:
+    itp = _should_interpret(interpret)
+    shape = x.shape
+    n = x.size
+    x2d = _to_tiles(x, chain * block_rows, m)
+    out = _ms.scan_call(x2d, chain=chain, block_rows=block_rows,
+                        interpret=itp)
+    flat = out.reshape(-1)[:n]
+    if not inclusive:
+        flat = jnp.concatenate([jnp.zeros((1,), flat.dtype), flat[:-1]])
+    return flat.reshape(shape)
+
+
+# VMEM ceiling for the in-kernel one-hot tile of mma_segment_sum: the
+# (block_rows * m, S) f32 mask must stay well under the ~16MB budget
+# alongside the input tile and accumulator.
+_SEG_MASK_BUDGET = 4 * 2**20
+
+
+def mma_segment_sum(values, segment_ids, num_segments: int, *,
+                    block_rows=128, m: int = MXU_M,
+                    interpret=None) -> jax.Array:
+    """Segmented sum via MMAs against the one-hot segment matrix
+    (Pallas).  ``values``/``segment_ids`` are flattened together;
+    returns (num_segments,) f32.  ``block_rows`` accepts 'auto'
+    (autotuned plan registry, op='segment_sum'); either way it is
+    clamped so the in-kernel (block_rows*m, S) one-hot tile fits VMEM
+    — large segment counts get proportionally shorter tiles."""
+    _, block_rows = _resolve_auto(values, 1, block_rows,
+                                  op="segment_sum")
+    s_pad = int(math.ceil(max(int(num_segments), 1) / 128)) * 128
+    max_rows = max(1, _SEG_MASK_BUDGET // (4 * m * s_pad))
+    while block_rows > 1 and block_rows > max_rows:
+        block_rows //= 2
+    return _mma_segment_sum_impl(values, segment_ids,
+                                 num_segments=int(num_segments),
+                                 block_rows=block_rows, m=m,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "block_rows", "m", "interpret"))
+def _mma_segment_sum_impl(values, segment_ids, *, num_segments: int,
+                          block_rows: int, m: int, interpret) -> jax.Array:
+    itp = _should_interpret(interpret)
+    v2d = _to_tiles(values, block_rows, m)
+    # Pad ids with -1: padded slots match no segment column.
+    ids = jnp.ravel(segment_ids).astype(jnp.int32)
+    pad = v2d.size - ids.shape[0]
+    if pad:
+        ids = jnp.pad(ids, (0, pad), constant_values=-1)
+    ids2d = ids.reshape(v2d.shape)
+    # Lane-align the segment axis; slice the padding off afterwards.
+    s_pad = int(math.ceil(max(num_segments, 1) / 128)) * 128
+    out = _ms.segment_sum_call(v2d, ids2d, num_segments=s_pad,
+                               block_rows=block_rows, interpret=itp)
+    return out[0, :num_segments]
 
 
 def _pick_block_rows(rows: int, d: int, vmem_budget: int = 8 * 2**20):

@@ -34,6 +34,22 @@ def squared_sum_ref(x) -> jax.Array:
     return jnp.sum(xf * xf)
 
 
+def scan_ref(x, *, inclusive: bool = True) -> jax.Array:
+    """f32 prefix sum of the flattened input, in the original shape."""
+    flat = jnp.cumsum(jnp.ravel(x).astype(jnp.float32))
+    if not inclusive:
+        flat = jnp.concatenate([jnp.zeros((1,), flat.dtype), flat[:-1]])
+    return flat.reshape(x.shape)
+
+
+def segment_sum_ref(values, segment_ids, num_segments: int) -> jax.Array:
+    """f32 segmented sum (empty segments are 0)."""
+    import jax.ops
+    return jax.ops.segment_sum(
+        jnp.ravel(values).astype(jnp.float32), jnp.ravel(segment_ids),
+        num_segments=num_segments)
+
+
 def rmsnorm_ref(x2d, weight, *, eps: float = 1e-6,
                 weight_offset: float = 0.0) -> jax.Array:
     xf = x2d.astype(jnp.float32)

@@ -10,7 +10,9 @@ Layout (EP x ETP):
 Everything runs inside one shard_map region so the collectives are
 explicit (they appear as all-to-all / all-reduce in the compiled HLO and
 are measured by the roofline harness).  Routing statistics (tokens per
-expert for the load-balance loss) use the paper's ones-MMA encoding.
+expert for the load-balance loss) use the paper's ones-MMA encoding,
+and the dispatch's per-expert buffer offsets are an exclusive prefix
+scan over the counts run as a triangular MMA (``repro.core.scan``).
 
 DeepSeek-V3: sigmoid router, top-8 of 256 + 1 shared expert, routed
 scaling.  Arctic: softmax top-2 of 128 + parallel dense-residual MLP.
@@ -107,7 +109,17 @@ def _dispatch_combine(cfg, params, x_flat, ep_size: int,
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]
     counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
-    starts = jnp.cumsum(counts) - counts
+    # Per-expert buffer offsets = exclusive prefix of the counts — run
+    # as a triangular ones-MMA scan (repro.core.scan).  Precision is
+    # pinned to HIGHEST so the MXU/TF32 multiplicand truncation cannot
+    # shift an integer offset, and f32 accumulation is exact below
+    # 2^24; beyond that fall back to the int path.
+    if t * k < 2**24:
+        starts = jnp.round(ci.cumsum(
+            counts, inclusive=False, method="mma", chain=1,
+            precision=jax.lax.Precision.HIGHEST)).astype(jnp.int32)
+    else:
+        starts = jnp.cumsum(counts) - counts
     pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
     keep = pos < cap
     slot = jnp.where(keep, sorted_e * cap + pos, e * cap)  # OOB -> dropped

@@ -6,10 +6,14 @@
     h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
 
 The diagonal linear recurrence is evaluated with
-``lax.associative_scan`` (log-depth, fully parallel over time — the
-TPU-idiomatic replacement for the paper-family's sequential CUDA scan).
-A causal depthwise conv (width 4) precedes the recurrence; the gated
-GeLU branch multiplies the recurrence output (Griffin's gated block).
+``repro.core.scan.tc_linear_recurrence`` — chunks of the sequence are
+densified into per-channel lower-triangular decay matrices (built from
+a log-space triangular-MMA prefix scan) and solved with one batched
+matmul per chunk, so the recurrence rides the matrix unit like every
+other reduction in this stack (the TPU-idiomatic replacement for the
+paper-family's sequential CUDA scan).  A causal depthwise conv
+(width 4) precedes the recurrence; the gated GeLU branch multiplies the
+recurrence output (Griffin's gated block).
 
 Decode state: {"h": (B, lru), "conv": (B, conv_width-1, lru)} — O(1) in
 sequence length, hence long_500k runs for this arch.
@@ -20,6 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.scan import tc_linear_recurrence
 from repro.distributed.sharding import constrain
 from repro.models.param import Param
 
@@ -90,17 +95,10 @@ def rglru_apply(params, cfg, x, state):
     a = jnp.exp(log_a)
     gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * uf)
 
-    # h_t = a_t h_{t-1} + b_t  — parallel associative scan over time,
-    # seeded with the carry-in state via a virtual step 0.
-    a_seq = jnp.concatenate([jnp.ones((b, 1, a.shape[-1]), a.dtype), a],
-                            axis=1)
-    b_seq = jnp.concatenate([state["h"][:, None, :], gated_in], axis=1)
-
-    def comb(lhs, rhs):
-        return (lhs[0] * rhs[0], rhs[0] * lhs[1] + rhs[1])
-
-    _, h_all = jax.lax.associative_scan(comb, (a_seq, b_seq), axis=1)
-    h = h_all[:, 1:, :]
+    # h_t = a_t h_{t-1} + b_t  — chunked triangular-MMA linear
+    # recurrence (repro.core.scan), seeded with the carry-in state.
+    h, h_last = tc_linear_recurrence(log_a, gated_in, state["h"],
+                                     chunk=min(16, max(s, 1)))
     out = (h.astype(dt) * y_gate) @ params["wo"].astype(dt)
-    new_state = {"h": h[:, -1, :], "conv": new_tail}
+    new_state = {"h": h_last, "conv": new_tail}
     return constrain(out, ("batch", None, None)), new_state

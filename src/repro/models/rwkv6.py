@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.scan import tc_cumprod
 from repro.distributed.sharding import constrain
 from repro.models.param import Param
 
@@ -132,9 +133,11 @@ def _wkv_chunked(r, k, v, w, u, state0, *, chunk: int = 32):
       3. one batched einsum adding each token's cross-chunk term
          r_t · (prefix-decay_t ⊙ S_in[chunk(t)]).
 
-    Numerically safe: decay products span at most ``chunk`` steps and
-    w in (0,1), so no log-space tricks are needed.  Exact vs the
-    sequential scan (tests/test_rwkv_chunked.py)."""
+    The step-3 prefix decays are a log-space triangular-MMA scan
+    (``repro.core.scan.tc_cumprod``): w in (0,1) keeps the log-space
+    sum monotone and overflow-free, and the products span at most
+    ``chunk`` steps, so the result matches the sequential scan to f32
+    accumulation tolerance (2e-5 in tests/test_rwkv_chunked.py)."""
     B, S, N, hs = r.shape
     c = chunk
     assert S % c == 0, (S, c)
@@ -166,10 +169,14 @@ def _wkv_chunked(r, k, v, w, u, state0, *, chunk: int = 32):
     s_final, s_in = jax.lax.scan(inter, state0, (d_x, l_x))
     s_in = jnp.moveaxis(s_in, 0, 1)                  # (B, nc, N, hs, hs)
 
-    # 3. cross-chunk contribution via prefix decays (exclusive cumprod)
-    pref = jnp.cumprod(
-        jnp.concatenate([jnp.ones_like(wf[:, :, :1]), wf[:, :, :-1]],
-                        axis=2), axis=2)
+    # 3. cross-chunk contribution via prefix decays: an exclusive
+    # cumulative product over the chunk axis, run as a log-space
+    # triangular-MMA scan (repro.core.scan) so the prefix rides the
+    # matrix unit like every other reduction in the stack.  Geometry
+    # sized to the chunk axis (one c x c triangular MMA per chunk, no
+    # pad-to-512 waste on this training hot path).
+    pref = tc_cumprod(wf, axis=2, inclusive=False, chain=1,
+                      m=max(8, min(128, c)))
     y_cross = jnp.einsum("bcsni,bcnij->bcsnj", rf * pref, s_in)
     y = (y_intra + y_cross).reshape(B, S, N, hs)
     return y, s_final

@@ -54,6 +54,35 @@ def test_prefetch_iterator_resumes():
                                   np.asarray(p.batch_at(5)["tokens"]))
 
 
+def test_running_stats_on_mma_path():
+    from repro.data.pipeline import RunningStats
+    rs = RunningStats()
+    assert rs.summary()["steps"] == 0
+    p = _pipe(b=4, s=32)
+    for step in range(3):
+        got = rs.update(p.batch_at(step))
+        assert got == 4 * 32  # all-ones mask
+    s = rs.summary()
+    assert s["steps"] == 3 and s["total_tokens"] == 3 * 128
+    assert s["mean_tokens"] == 128.0 and s["std_tokens"] == 0.0
+    np.testing.assert_allclose(rs.cumulative_tokens(),
+                               [128.0, 256.0, 384.0])
+
+
+def test_with_positions_masked_scan():
+    from repro.data.pipeline import mask_positions
+    p = _pipe()
+    p.with_positions = True
+    b = p.batch_at(0)
+    assert b["positions"].shape == b["mask"].shape
+    # all-ones mask: positions are just 0..s-1 per row
+    np.testing.assert_array_equal(
+        np.asarray(b["positions"])[0], np.arange(32))
+    m = jnp.asarray([[1.0, 0.0, 1.0, 1.0]])
+    np.testing.assert_array_equal(np.asarray(mask_positions(m)),
+                                  [[0, 1, 1, 2]])
+
+
 def test_int8_quantise_roundtrip():
     x = jnp.asarray(np.random.default_rng(0).normal(size=1000)
                     .astype(np.float32))
