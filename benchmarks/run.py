@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   rb_sweep    — Figs. 3, 5, 11 (chain R x block B configuration grid)
   split       — Fig. 6 (MXU/VPU split fraction)
   scan        — triangular-MMA scan & segmented-sum engines + plans
+  dispatch    — TC-op registry overhead (eager/jit/auto/decision)
   precision   — Fig. 7 bottom / Fig. 8 right (% error vs FP64 oracle)
   integration — reduction engine inside the LM stack (loss/grad-norm)
   roofline    — §Roofline summary from the dry-run artifacts (if present)
@@ -18,12 +19,14 @@ import sys
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_precision, bench_rb_sweep,
-                            bench_reduction, bench_scan, bench_split)
+    from benchmarks import (bench_dispatch, bench_precision,
+                            bench_rb_sweep, bench_reduction, bench_scan,
+                            bench_split)
     bench_reduction.run()
     bench_rb_sweep.run()
     bench_split.run()
     bench_scan.run()
+    bench_dispatch.run()
     bench_precision.run()
 
     # integration micro-bench: the MMA engine as used by the framework

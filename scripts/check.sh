@@ -1,13 +1,22 @@
 #!/usr/bin/env bash
-# CI-style tier-1 check: docs + doctests + the canonical suite
-# invocation (see ROADMAP.md).
+# CI-style tier-1 check: lint + structure guards + docs + doctests +
+# the canonical suite invocation (see ROADMAP.md).
 #
-#   scripts/check.sh            # docs check, doctests, full suite
+#   scripts/check.sh            # all steps, full suite
 #   scripts/check.sh -m 'not slow'   # fast lane (skips multi-device
 #                                    # subprocess tests); extra args are
 #                                    # passed straight to pytest
 #
 # Steps:
+#   ruff     ruff check (error/pyflakes classes: syntax errors,
+#            undefined names, f-string and comparison bugs).  Skipped
+#            with a notice when ruff is not installed — the container
+#            image does not ship it;
+#   ladders  structural guard: `method ==` dispatch ladders are only
+#            allowed inside the TC-op registry (src/repro/core/
+#            dispatch.py).  Every other module must route through
+#            repro.core.dispatch.dispatch() — a grep hit here means a
+#            new per-op ladder crept back in;
 #   docs     scripts/check_docs.py — markdown links/anchors resolve and
 #            every backticked `repro.*` symbol / repo path in README +
 #            docs/ maps to real code (broken cross-references fail
@@ -18,6 +27,22 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== ruff =="
+if command -v ruff >/dev/null 2>&1; then
+    ruff check --select=E9,F63,F7,F82 src tests benchmarks scripts examples
+else
+    echo "ruff not installed — skipping lint (pip install ruff to enable)"
+fi
+
+echo "== dispatch-ladder guard =="
+if grep -rn "method ==" src --include='*.py' \
+        | grep -v "core/dispatch.py"; then
+    echo "FAIL: 'method ==' dispatch ladder outside core/dispatch.py" \
+         "— route through repro.core.dispatch.dispatch() instead" >&2
+    exit 1
+fi
+echo "ok: engine selection only inside the TC-op registry"
 
 echo "== docs =="
 python scripts/check_docs.py

@@ -5,7 +5,9 @@ first-class service of the training/serving framework.
 """
 
 from repro.core.reduction import (  # noqa: F401
+    tc_contract,
     tc_reduce,
+    tc_reduce_axes,
     tc_reduce_lastdim,
     tc_reduce_rows,
 )
@@ -26,4 +28,4 @@ from repro.core.integration import (  # noqa: F401
     segment_sum,
     squared_sum,
 )
-from repro.core import theory, precision  # noqa: F401
+from repro.core import dispatch, theory, precision  # noqa: F401

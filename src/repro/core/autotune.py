@@ -20,14 +20,15 @@ module makes that selection automatic:
   * ``get_plan``          the one-call entry the framework hooks
     (``integration.reduce_sum(method="auto")`` etc.) consult.
 
-Plans come in op families: the reduce family (``reduce_sum``,
-``squared_sum``, ``masked_mean``, ``expert_counts``), the scan family
-(``op='scan'`` / ``'masked_cumsum'`` — triangular-MMA engines scored by
-``theory.t_tc_scan``/``op_count_scan``), and the segmented family
-(``op='segment_sum'`` — mask-contraction engines).  The family decides
-which engines ``candidate_plans`` enumerates and which executor
-(``execute_plan`` / ``execute_scan_plan`` / ``execute_segment_plan``)
-runs the winner.
+The op universe is NOT hardcoded here: ``candidate_plans`` enumerates
+engines and their sweep knobs off the TC-op registry
+(``repro.core.dispatch`` — each ``OpSpec`` declares its engines and
+each ``EngineSpec`` its sweep axes), ``model_cost`` scores them with
+the family cost model (scan ops via ``theory.t_tc_scan`` /
+``op_count_scan``) unless the op registers its own cost hook, and the
+single executor ``execute_plan`` runs any plan for any op through the
+registry's engine runners.  Adding an op or engine is a
+``dispatch.register`` call; this module needs no edit.
 
 Problem sizes are bucketed to the next power of two so one tuned plan
 serves every n in its octave — the paper's curves are smooth in n, and
@@ -38,6 +39,7 @@ small.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import math
 import os
@@ -126,52 +128,40 @@ def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
 # double-buffered, must fit on-chip.
 _VMEM_BUDGET = 16 * 2**20
 
-# Plan families: which engines make sense for each op.  The reduce
-# family has all four; prefix scans have no single-contraction form (a
-# scan must keep every prefix, so 'mma' is meaningless) and segmented
-# sums have no chained-geometry pure-JAX form (the one-hot contraction
-# IS the engine, so 'mma_chained' collapses into 'mma').
-SCAN_OPS = ("scan", "masked_cumsum")
-SEGMENT_OPS = ("segment_sum",)
-
 
 def candidate_plans(n: int, dtype, *, chains=CHAINS, blocks=BLOCK_ROWS,
                     m: int = DEFAULT_M, engine: Engine = None,
                     op: str = "reduce_sum") -> Iterator[ReductionPlan]:
-    """Enumerate the sweep space for one problem.
+    """Enumerate the sweep space for one problem, off the op registry.
 
-    For the reduce family (the default ops) the unrestricted space is
-    the two geometry-free engines ('mma' ones-contraction and the 'vpu'
-    baseline), the pure-JAX chained core over R, and the Pallas kernel
-    over R x B; ``engine`` narrows it to one engine (or a tuple of
-    engines) — how the per-engine 'auto' geometry spellings get a plan
-    actually tuned for the engine they run.  Pallas plans are pruned
-    when the tile would not fit VMEM (dtype-dependent) or would be
-    strictly more padding than a smaller config.
-
-    ``op`` selects the plan family: ops in ``SCAN_OPS`` sweep the
-    triangular-MMA engines ('mma_chained' = tc_scan over R, 'pallas' =
-    mma_scan over R x B, 'vpu' = jnp.cumsum) and ops in ``SEGMENT_OPS``
-    sweep the mask-contraction engines ('mma' = tc_segment_reduce,
-    'pallas' = mma_segment_sum over B, 'vpu' = jax.ops.segment_sum).
+    The op's ``repro.core.dispatch.OpSpec`` declares the engines; each
+    engine's ``sweep`` declares its knobs: geometry-free engines (the
+    'mma' ones-contraction, the 'vpu' baseline) contribute one
+    candidate, ``('chain',)`` engines sweep the paper's R, and
+    ``('chain', 'block_rows')`` engines sweep the full R x B grid.
+    ``engine`` narrows the space to one engine (or a tuple) — how the
+    per-engine 'auto' geometry spellings get a plan actually tuned for
+    the engine they run.  VMEM-tiled (block_rows-swept) plans are
+    pruned when the tile would not fit on-chip (dtype-dependent) or
+    would be strictly more padding than a smaller config.
     """
+    from repro.core import dispatch
+    spec = dispatch.op_spec(op)
     methods = _engine_methods(engine)
     itemsize = jax.numpy.dtype(dtype).itemsize
-
-    def want(name):
-        return methods is None or name in methods
-
-    if want("mma") and op not in SCAN_OPS:
-        yield ReductionPlan(method="mma")
-    if want("vpu"):
-        yield ReductionPlan(method="vpu")
-    if want("mma_chained") and op not in SEGMENT_OPS:
-        for chain in chains:
-            yield ReductionPlan(method="mma_chained", chain=chain, m=m)
-    if want("pallas"):
-        seg_chains = (1,) if op in SEGMENT_OPS else chains
+    for eng in spec.engines:
+        if methods is not None and eng.name not in methods:
+            continue
+        if not eng.sweep:
+            yield ReductionPlan(method=eng.name)
+            continue
+        eng_chains = chains if "chain" in eng.sweep else (1,)
+        if "block_rows" not in eng.sweep:
+            for chain in eng_chains:
+                yield ReductionPlan(method=eng.name, chain=chain, m=m)
+            continue
         prev_tile = 0
-        for chain in seg_chains:
+        for chain in eng_chains:
             for block_rows in blocks:
                 tile = chain * block_rows * m
                 if 2 * tile * (itemsize + 4) > _VMEM_BUDGET:
@@ -179,50 +169,40 @@ def candidate_plans(n: int, dtype, *, chains=CHAINS, blocks=BLOCK_ROWS,
                 if tile > max(n, 1) and prev_tile > max(n, 1):
                     continue  # strictly more padding than a smaller one
                 prev_tile = tile
-                yield ReductionPlan(method="pallas", chain=chain,
+                yield ReductionPlan(method=eng.name, chain=chain,
                                     block_rows=block_rows, m=m)
 
 
 # --------------------------------------------------------------- cost
 
 
-def model_cost(plan: ReductionPlan, n: int, dtype,
-               op: str = "reduce_sum") -> float:
-    """Analytical score: Brent-style T = depth + work/P + overheads.
+def _cost_vpu(family: str, plan: ReductionPlan, n: int,
+              itemsize: int) -> float:
+    # classic parallel reduction/scan: log-depth + vectorised work (a
+    # Hillis-Steele scan does log2 n full-width passes, hence the
+    # extra work term for scans).
+    work = n / (_VPU_THROUGHPUT * _PARALLELISM)
+    if family == "scan":
+        work *= max(math.log2(max(n, 2.0)) / 4.0, 1.0)
+    return theory.t_classic(n) + work
 
-    For the reduce family, depth is the paper's chained PRAM bound
-    T^R(n) = (2R+3) log_{Rm^2} n (Eq. 24); for the scan family it is
-    the triangular-MMA analogue T^R_scan(n) = (2R+4) log_{Rm} n
-    (``theory.t_tc_scan``) with op counts from
-    ``theory.op_count_scan``.  Work/P and the per-grid-step overhead are
-    the finite-hardware corrections the paper observes experimentally
-    (which is why the model here does NOT always answer R=1 like the
-    pure PRAM model does).  Padding waste penalises tiles much larger
-    than n.
-    """
-    n = max(int(n), 1)
-    itemsize = jax.numpy.dtype(dtype).itemsize
-    mem = n * itemsize / (4.0 * _VPU_THROUGHPUT)  # streaming traffic
-    is_scan = op in SCAN_OPS
-    if plan.method == "vpu":
-        # classic parallel reduction/scan: log-depth + vectorised work
-        # (a Hillis-Steele scan does log2 n full-width passes, hence
-        # the extra work term for scans).
-        work = n / (_VPU_THROUGHPUT * _PARALLELISM)
-        if is_scan:
-            work *= max(math.log2(max(n, 2.0)) / 4.0, 1.0)
-        return theory.t_classic(n) + work + mem
-    if plan.method == "mma":
-        # one big contraction: two-MMA depth, full-MXU work (for
-        # segment_sum the one-hot mask build adds a VPU compare pass).
-        extra = n / (_VPU_THROUGHPUT * _PARALLELISM) \
-            if op in SEGMENT_OPS else 0.0
-        return theory.t_tc(n, plan.m) + n / (_MXU_THROUGHPUT *
-                                             _PARALLELISM) + extra + mem
-    # chained engines: PRAM depth + MMA work + grid overheads
-    if is_scan:
+
+def _cost_mma(family: str, plan: ReductionPlan, n: int,
+              itemsize: int) -> float:
+    # one big contraction: two-MMA depth, full-MXU work (for the
+    # segment family the one-hot mask build adds a VPU compare pass).
+    extra = n / (_VPU_THROUGHPUT * _PARALLELISM) \
+        if family == "segment" else 0.0
+    return theory.t_tc(n, plan.m) + n / (_MXU_THROUGHPUT *
+                                         _PARALLELISM) + extra
+
+
+def _cost_chained(family: str, plan: ReductionPlan, n: int,
+                  itemsize: int, *, grid_walk: bool = False) -> float:
+    # chained engines: PRAM depth + MMA work + grid overheads.
+    if family == "scan":
         tile = plan.chain * plan.block_rows * plan.m \
-            if plan.method == "pallas" else plan.chain * plan.m
+            if grid_walk else plan.chain * plan.m
         groups = max(1, math.ceil(n / tile))
         padded = groups * tile
         depth = theory.t_tc_scan(n, plan.m, plan.chain)
@@ -238,12 +218,49 @@ def model_cost(plan: ReductionPlan, n: int, dtype,
     work = oc.mma_ops / _PARALLELISM
     grid = 0.0
     waste = (padded - n) / (_MXU_THROUGHPUT * _PARALLELISM)
-    if plan.method == "pallas":
+    if grid_walk:
         # sequential grid walk: one VMEM tile fill + accumulate per step
         grid = _GRID_STEP_OVERHEAD * groups / _PARALLELISM
-    if op in SEGMENT_OPS:
+    if family == "segment":
         grid += n / (_VPU_THROUGHPUT * _PARALLELISM)  # mask build
-    return depth + work + grid + waste + mem
+    return depth + work + grid + waste
+
+
+# Per-engine scoring — keyed, not branched, so the only place engine
+# names select behaviour stays the dispatch registry.
+_ENGINE_COSTS = {
+    "vpu": _cost_vpu,
+    "mma": _cost_mma,
+    "mma_chained": _cost_chained,
+    "pallas": functools.partial(_cost_chained, grid_walk=True),
+}
+
+
+def model_cost(plan: ReductionPlan, n: int, dtype,
+               op: str = "reduce_sum") -> float:
+    """Analytical score: Brent-style T = depth + work/P + overheads.
+
+    For the reduce family, depth is the paper's chained PRAM bound
+    T^R(n) = (2R+3) log_{Rm^2} n (Eq. 24); for the scan family it is
+    the triangular-MMA analogue T^R_scan(n) = (2R+4) log_{Rm} n
+    (``theory.t_tc_scan``) with op counts from
+    ``theory.op_count_scan``.  Work/P and the per-grid-step overhead are
+    the finite-hardware corrections the paper observes experimentally
+    (which is why the model here does NOT always answer R=1 like the
+    pure PRAM model does).  Padding waste penalises tiles much larger
+    than n.  The op's family comes from its registry entry
+    (``repro.core.dispatch.OpSpec.family``); an op with a registered
+    ``cost`` hook overrides this model entirely.
+    """
+    from repro.core import dispatch
+    spec = dispatch.op_spec(op)
+    if spec.cost is not None:
+        return spec.cost(plan, n, dtype)
+    n = max(int(n), 1)
+    itemsize = jax.numpy.dtype(dtype).itemsize
+    mem = n * itemsize / (4.0 * _VPU_THROUGHPUT)  # streaming traffic
+    return _ENGINE_COSTS[plan.method](spec.family, plan, n,
+                                      itemsize) + mem
 
 
 # Segment count used when timing segment_sum candidates (the plan key
@@ -254,20 +271,32 @@ _MEASURE_SEGMENTS = 128
 def measure_cost(plan: ReductionPlan, n: int, dtype, *, iters: int = 5,
                  warmup: int = 2, seed: int = 0,
                  op: str = "reduce_sum") -> float:
-    """Wall-clock microseconds for one plan on this host's backend."""
+    """Wall-clock microseconds for one plan on this host's backend.
+
+    The timed problem comes from the op's registry entry: an op with a
+    ``measure`` hook builds its own representative input (masked_mean's
+    mask, expert_counts' one-hot matrix); otherwise the family default
+    is a size-n 1D stream (plus random segment ids for the segment
+    family).
+    """
     import numpy as np
+    from repro.core import dispatch
+    spec = dispatch.op_spec(op)
     rng = np.random.default_rng(seed)
-    x = jax.numpy.asarray(
-        rng.standard_normal(n).astype(np.float32)).astype(dtype)
-    if op in SCAN_OPS:
-        fn = lambda v: execute_scan_plan(v, plan)
-    elif op in SEGMENT_OPS:
-        ids = jax.numpy.asarray(
-            rng.integers(0, _MEASURE_SEGMENTS, n).astype(np.int32))
-        fn = lambda v: execute_segment_plan(v, ids, _MEASURE_SEGMENTS,
-                                            plan)
+    if spec.measure is not None:
+        x, kwargs = spec.measure(n, dtype, rng)
     else:
-        fn = lambda v: execute_plan(v, plan)
+        x = jax.numpy.asarray(
+            rng.standard_normal(n).astype(np.float32)).astype(dtype)
+        kwargs = {}
+        if spec.family == "segment":
+            kwargs = {
+                "segment_ids": jax.numpy.asarray(
+                    rng.integers(0, _MEASURE_SEGMENTS, n)
+                    .astype(np.int32)),
+                "num_segments": _MEASURE_SEGMENTS,
+            }
+    fn = lambda v: execute_plan(v, plan, op=op, **kwargs)
     out = None
     for _ in range(warmup):
         out = fn(x)
@@ -279,98 +308,20 @@ def measure_cost(plan: ReductionPlan, n: int, dtype, *, iters: int = 5,
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def execute_plan(x, plan: ReductionPlan, *, square: bool = False):
-    """Run one reduction under ``plan``. Returns an f32 scalar.
+def execute_plan(x, plan: ReductionPlan, *, op: str = "reduce_sum",
+                 **op_kwargs):
+    """Run one problem under ``plan`` — the subsystem's ONE executor.
 
-    This is the single dispatch point of the subsystem — the auto path
-    of every ``integration`` hook lands here, so no call site carries
-    hardcoded chain/block_rows.
+    Every op family goes through here: the auto path of every
+    ``integration`` hook, the measured sweep, and the benchmark
+    drivers, so no call site carries hardcoded chain/block_rows.  The
+    op's engine runner comes from the TC-op registry
+    (``repro.core.dispatch.execute``); op-specific operands (a scan's
+    ``axis``/``inclusive``, a segmented sum's ``segment_ids`` /
+    ``num_segments``, masked_mean's ``mask``) ride ``op_kwargs``.
     """
-    import jax.numpy as jnp
-    from repro.core import reduction as R
-    if square and plan.method == "mma":
-        from repro.core.integration import _contract_all
-        return _contract_all(x, x)
-    if square and plan.method == "pallas":
-        from repro.kernels import mma_squared_sum
-        return mma_squared_sum(x, chain=plan.chain,
-                               block_rows=plan.block_rows)
-    if square:
-        x = x.astype(jnp.float32)
-        x = x * x
-    if plan.method == "vpu":
-        return jnp.sum(x.astype(jnp.float32))
-    if plan.method == "mma":
-        from repro.core.integration import _contract_all
-        return _contract_all(x, jnp.ones_like(x))
-    if plan.method == "mma_chained":
-        return R.tc_reduce(x, variant=plan.variant, chain=plan.chain,
-                           m=plan.m)
-    if plan.method == "pallas":
-        from repro.kernels import mma_reduce
-        return mma_reduce(x, variant=plan.variant, chain=plan.chain,
-                          block_rows=plan.block_rows)
-    raise ValueError(f"unknown plan method: {plan.method!r}")
-
-
-def execute_scan_plan(x, plan: ReductionPlan, *, axis: int = -1,
-                      inclusive: bool = True):
-    """Run one prefix scan under ``plan``. Returns f32, same shape.
-
-    The scan twin of ``execute_plan`` — the auto path of
-    ``integration.cumsum``/``masked_cumsum`` lands here.  The Pallas
-    engine scans the flattened input, so it is only dispatched for 1D
-    inputs (or an axis that IS the flattened order); the enumeration in
-    ``integration`` restricts the engine set accordingly.
-    """
-    from repro.core import scan as S
-    if plan.method == "vpu":
-        return _vpu_scan(x, axis=axis, inclusive=inclusive)
-    if plan.method == "mma_chained":
-        return S.tc_scan(x, axis=axis, inclusive=inclusive,
-                         variant=plan.variant, chain=plan.chain, m=plan.m)
-    if plan.method == "pallas":
-        if x.ndim != 1 and not (axis in (-1, x.ndim - 1) and
-                                all(d == 1 for d in x.shape[:-1])):
-            raise ValueError(
-                "the Pallas scan engine operates on the flattened input; "
-                f"got ndim={x.ndim} axis={axis} — use the 'mma_chained' "
-                "or 'vpu' engines for batched/multi-axis scans")
-        from repro.kernels import mma_scan
-        return mma_scan(x, inclusive=inclusive, chain=plan.chain,
-                        block_rows=plan.block_rows)
-    raise ValueError(f"unknown scan plan method: {plan.method!r}")
-
-
-def _vpu_scan(x, *, axis: int, inclusive: bool):
-    """Classic-scan baseline: jnp.cumsum in f32 (exclusive by shift)."""
-    import jax.numpy as jnp
-    out = jnp.cumsum(x.astype(jnp.float32), axis=axis)
-    if not inclusive:
-        from repro.core import scan as S
-        out = jnp.moveaxis(
-            S._shift_exclusive(jnp.moveaxis(out, axis, -1)), -1, axis)
-    return out
-
-
-def execute_segment_plan(values, segment_ids, num_segments: int,
-                         plan: ReductionPlan):
-    """Run one segmented sum under ``plan``. Returns (num_segments,) f32."""
-    import jax.numpy as jnp
-    from repro.core import scan as S
-    if plan.method == "vpu":
-        import jax.ops
-        return jax.ops.segment_sum(
-            jnp.ravel(values).astype(jnp.float32),
-            jnp.ravel(segment_ids), num_segments=num_segments)
-    if plan.method == "mma":
-        return S.tc_segment_reduce(values, segment_ids, num_segments,
-                                   m=plan.m)
-    if plan.method == "pallas":
-        from repro.kernels import mma_segment_sum
-        return mma_segment_sum(values, segment_ids, num_segments,
-                               block_rows=plan.block_rows)
-    raise ValueError(f"unknown segment plan method: {plan.method!r}")
+    from repro.core import dispatch
+    return dispatch.execute(op, x, plan, **op_kwargs)
 
 
 # ----------------------------------------------------------- registry

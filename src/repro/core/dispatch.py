@@ -1,0 +1,611 @@
+"""The TC-op registry: one declarative dispatch layer for every
+tensor-core op family.
+
+The paper's chained-MMA encoding powers three op families in this repo
+(arithmetic reductions, prefix scans, segmented sums), and Dakkak et
+al. ("Accelerating Reduction and Scan Using Tensor Core Units") show
+they share one TCU algorithm skeleton.  This module is the single
+place that knowledge lives: each op (``reduce_sum``, ``squared_sum``,
+``masked_mean``, ``expert_counts``, ``scan``, ``masked_cumsum``,
+``segment_sum``) is registered as an :class:`OpSpec` declaring
+
+  * its execution engines (:class:`EngineSpec`): the ones-contraction
+    ``'mma'``, the explicitly chained ``'mma_chained'`` core, the
+    hand-tiled ``'pallas'`` kernel, and the classic ``'vpu'`` baseline
+    — each with a ``run(x, plan, **op_kwargs)`` callable;
+  * per-engine **capability predicates** — multi-device safety, axis /
+    ndim / layout support, dtype restrictions — evaluated against a
+    :class:`DispatchContext` built from the call;
+  * a pure-jnp **reference oracle** (what the tests compare every
+    engine against);
+  * the autotuner hooks: which knobs each engine sweeps
+    (``EngineSpec.sweep``) and an optional per-op cost-model override
+    (``OpSpec.cost``).
+
+``dispatch(op, x, method=..., **op_kwargs)`` is the one entry point
+the framework hooks (``repro.core.integration``) call: explicit
+methods are capability-checked (an illegal engine raises ``ValueError``
+with the reason — no hook can silently misroute again), and
+``method='auto'`` restricts the autotuner's sweep to the engines that
+are *legal for this call* before executing the winning plan through
+``execute``.  The autotuner (``repro.core.autotune``) enumerates its
+candidate space off the same registry, so adding an op or an engine is
+one ``register()`` call — not another dispatch ladder.
+
+This module is deliberately the only place in ``src/`` where engine
+names are compared (``scripts/check.sh`` greps for ``method ==``
+ladders outside it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ------------------------------------------------------------- context
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchContext:
+    """Trace-time facts one dispatch decision is made from.
+
+    Everything here is static shape/dtype/mesh information, so building
+    a context (and therefore the whole auto path) is jit-safe.
+    """
+    op: str
+    shape: tuple
+    dtype: str
+    multi_device: bool
+    axis: Optional[tuple] = None    # reduce family: reduced-axis subset
+    scan_axis: Optional[int] = None  # scan family: the scanned axis
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def axis_subset(self) -> bool:
+        """True when only *some* axes are reduced (batched reduction)."""
+        return self.axis is not None and len(self.axis) < self.ndim
+
+    @property
+    def flat(self) -> bool:
+        """Effectively 1D: the op's axis walk IS the flattened order."""
+        if self.ndim <= 1:
+            return True
+        if self.scan_axis is None:
+            return False
+        return (self.scan_axis == self.ndim - 1
+                and all(d == 1 for d in self.shape[:-1]))
+
+
+def _multi_device() -> bool:
+    from repro.distributed import sharding as shd
+    mesh = shd.current_mesh()
+    return mesh is not None and math.prod(mesh.devices.shape) > 1
+
+
+# -------------------------------------------------------------- engines
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """One execution engine of an op, with declarative capabilities.
+
+    ``run(x, plan, **op_kwargs)`` executes the op under a
+    ``repro.core.autotune.ReductionPlan`` whose geometry fields
+    (variant / chain / block_rows / m) it honours.  ``sweep`` names the
+    plan knobs the autotuner enumerates for this engine (``()`` =
+    geometry-free, one candidate).  The capability flags are evaluated
+    by :func:`capability_reason`; ``dtypes`` is ``None`` for
+    any-input-dtype (every engine accumulates in f32 regardless — the
+    precision contract) or a tuple of allowed input dtype names.
+    """
+    name: str
+    run: Callable
+    multi_device_safe: bool = False
+    axis_subsets: bool = False      # batched reductions (axis=...)
+    needs_flat: bool = False        # requires effectively-1D layout
+    ndim: Optional[int] = None      # exact input rank, None = any
+    dtypes: Optional[tuple] = None  # allowed input dtype names
+    sweep: tuple = ()               # of 'chain' / 'block_rows'
+
+
+def capability_reason(eng: EngineSpec, ctx: DispatchContext, *,
+                      env: bool = True) -> Optional[str]:
+    """Why ``eng`` cannot serve ``ctx`` — or None when it can.
+
+    ``env=False`` skips the environment predicate (multi-device mesh)
+    and checks only structural shape/axis/dtype facts; the executor
+    uses that mode so an already-chosen plan is still validated against
+    the input it is applied to.
+    """
+    if env and ctx.multi_device and not eng.multi_device_safe:
+        return ("not distribution-safe: flatten-and-pad forces a "
+                "re-layout of sharded operands under a live "
+                "multi-device mesh")
+    if ctx.axis_subset and not eng.axis_subsets:
+        return "flatten-only engine: no axis-subset (batched) support"
+    if eng.needs_flat and not ctx.flat:
+        return ("operates on the flattened input; use a batched engine "
+                "for multi-axis inputs")
+    if eng.ndim is not None and ctx.ndim != eng.ndim:
+        return f"requires an ndim == {eng.ndim} input"
+    if eng.dtypes is not None and ctx.dtype not in eng.dtypes:
+        return f"dtype {ctx.dtype} not in {eng.dtypes}"
+    return None
+
+
+# ------------------------------------------------------------------ ops
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One registered TC-op.
+
+    ``engines`` is the ordered tuple of concrete engines (order is the
+    enumeration — and engine-restriction key — order); ``aliases`` maps
+    accepted method spellings onto concrete engines (e.g. the scan
+    family's ``'mma'`` *is* its chained triangular core).
+    ``reference`` is the pure-jnp oracle with the op's exact keyword
+    surface; ``size_of`` extracts the problem size the plan registry
+    keys on; ``family`` picks the default analytical cost model and
+    ``cost`` optionally overrides it per-op.
+    """
+    name: str
+    family: str                     # 'reduce' | 'scan' | 'segment'
+    engines: tuple                  # tuple[EngineSpec, ...]
+    reference: Callable
+    aliases: Optional[dict] = None
+    size_of: Optional[Callable] = None   # (x, op_kwargs) -> int
+    cost: Optional[Callable] = None      # (plan, n, dtype) -> float
+    measure: Optional[Callable] = None   # (n, dtype, rng) -> (x, kw)
+
+    def engine(self, name: str) -> Optional[EngineSpec]:
+        name = (self.aliases or {}).get(name, name)
+        for eng in self.engines:
+            if eng.name == name:
+                return eng
+        return None
+
+    def engine_names(self) -> tuple:
+        return tuple(e.name for e in self.engines)
+
+    def problem_size(self, x, op_kwargs: dict) -> int:
+        if self.size_of is not None:
+            return self.size_of(x, op_kwargs)
+        return x.size
+
+
+_REGISTRY: dict[str, OpSpec] = {}
+
+
+def register(spec: OpSpec) -> OpSpec:
+    """Add (or replace) one op in the registry."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def ops() -> tuple:
+    """Registered op names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def op_spec(name: str) -> OpSpec:
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown TC-op {name!r}; registered: {', '.join(ops())}")
+    return spec
+
+
+def build_context(op: str, x, *, axis=None, scan_axis=None,
+                  multi_device: Optional[bool] = None) -> DispatchContext:
+    if multi_device is None:
+        multi_device = _multi_device()
+    return DispatchContext(
+        op=op, shape=tuple(x.shape), dtype=jnp.dtype(x.dtype).name,
+        multi_device=multi_device, axis=axis, scan_axis=scan_axis)
+
+
+def legal_engines(spec: OpSpec, ctx: DispatchContext) -> tuple:
+    """Engine names (registration order) whose capabilities cover ctx."""
+    return tuple(e.name for e in spec.engines
+                 if capability_reason(e, ctx) is None)
+
+
+def supported_method(op: str, x, method: str, **op_kwargs) -> bool:
+    """Would ``dispatch(op, x, method=...)`` accept this call?
+
+    True when ``method`` is ``'auto'`` or resolves (through the op's
+    aliases) to an engine whose capability predicates cover the call.
+    Callers with their own fallback policy (e.g. a hot path that maps
+    an inapplicable ablation engine to the classic baseline instead of
+    failing the whole forward pass) probe with this before
+    dispatching.
+    """
+    if method == "auto":
+        return True
+    spec = op_spec(op)
+    eng = spec.engine(method)
+    if eng is None:
+        return False
+    return capability_reason(eng, _context_for(spec, x, op_kwargs)) \
+        is None
+
+
+def resolve_method(op: str, x, method: str, *, fallback: str = "vpu",
+                   **op_kwargs) -> str:
+    """``method`` when ``dispatch`` would accept it, else ``fallback``.
+
+    The stay-trainable policy for the model/launch layers: a forward
+    pass must survive every ``reduce_method`` ablation spelling, so
+    consumers whose op cannot serve an engine (a flatten-only engine
+    asked for a per-row statistic, a non-distribution-safe engine
+    under a live mesh, an unknown string) map the knob onto a legal
+    engine here instead of failing at trace time.  The hooks
+    themselves stay strict — misrouting is only ever explicit, in one
+    place, with the policy named by the ``fallback`` argument.
+    """
+    if supported_method(op, x, method, **op_kwargs):
+        return method
+    return fallback
+
+
+# -------------------------------------------------------- entry points
+
+
+def dispatch(op: str, x, *, method: str = "auto", chain=None,
+             **op_kwargs):
+    """THE dispatch path: every framework hook lands here.
+
+    Explicit ``method`` spellings are resolved through the op's alias
+    map and capability-checked — an engine the op does not declare, or
+    one whose predicates reject this input/mesh, raises ``ValueError``
+    naming the reason.  ``method='auto'`` consults the autotuner's plan
+    registry under the *legal* engine subset for this call and executes
+    the winner.  ``chain`` (when not None) overrides the plan's chain
+    length on the explicit path, preserving the hooks' R knob — an int
+    is the paper's explicit R, and the string ``'auto'`` resolves the
+    engine-restricted tuned plan (chain AND block geometry) from the
+    registry, exactly like the kernels' per-engine 'auto' spellings.
+    The auto *method* ignores ``chain`` (the plan's tuned geometry
+    wins).
+    """
+    from repro.core import autotune
+    spec = op_spec(op)
+    ctx = _context_for(spec, x, op_kwargs)
+    if method == "auto":
+        legal = legal_engines(spec, ctx)
+        if not legal:
+            raise ValueError(f"no engine of op {op!r} supports this "
+                             f"input: shape={ctx.shape}")
+        restrict = None if legal == spec.engine_names() else legal
+        plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
+                                 x.dtype, op=op, engine=restrict)
+        return execute(op, x, plan, **op_kwargs)
+    eng = spec.engine(method)
+    if eng is None:
+        accepted = spec.engine_names() + tuple(spec.aliases or ())
+        raise ValueError(
+            f"unknown {op} method: {method!r} (accepted: 'auto', "
+            + ", ".join(repr(a) for a in sorted(accepted)) + ")")
+    reason = capability_reason(eng, ctx)
+    if reason is not None:
+        raise ValueError(
+            f"engine {eng.name!r} cannot run op {op!r} here: {reason}")
+    if chain == "auto":
+        plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
+                                 x.dtype, op=op, engine=(eng.name,))
+        return execute(op, x, plan, **op_kwargs)
+    overrides = {} if chain is None else {"chain": int(chain)}
+    plan = autotune.ReductionPlan(method=eng.name, **overrides)
+    return eng.run(x, plan, **op_kwargs)
+
+
+def execute(op: str, x, plan, **op_kwargs):
+    """Run ``x`` under an already-chosen plan — the single executor.
+
+    The auto path, the autotuner's measured sweep, and the benchmark
+    drivers all land here.  The plan's engine is validated against the
+    op's structural capabilities (axis/layout/ndim — not the mesh, so
+    candidate plans can be timed on a single host).
+    """
+    spec = op_spec(op)
+    eng = spec.engine(plan.method)
+    if eng is None:
+        raise ValueError(f"unknown plan method {plan.method!r} for op "
+                         f"{op!r} (engines: {spec.engine_names()})")
+    reason = capability_reason(eng, _context_for(spec, x, op_kwargs),
+                               env=False)
+    if reason is not None:
+        raise ValueError(
+            f"engine {eng.name!r} cannot run op {op!r} here: {reason}")
+    return eng.run(x, plan, **op_kwargs)
+
+
+def _context_for(spec: OpSpec, x, op_kwargs: dict) -> DispatchContext:
+    if spec.family == "scan":
+        axis = op_kwargs.get("axis", -1)
+        scan_axis = axis % max(x.ndim, 1)
+        return build_context(spec.name, x, scan_axis=scan_axis)
+    return build_context(spec.name, x, axis=op_kwargs.get("axis"))
+
+
+# ===================================================== engine runners
+#
+# Lazy imports throughout: the registry must import without pulling the
+# Pallas kernels (or the scan core) until an engine actually runs.
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+# ---- reduce family
+
+
+def _reduce_mma(x, plan, *, axis=None, **_):
+    from repro.core import reduction as R
+    if axis is None:
+        return R.tc_contract(x, jnp.ones_like(x))
+    return R.tc_reduce_axes(x, axis)
+
+
+def _reduce_chained(x, plan, **_):
+    from repro.core import reduction as R
+    return R.tc_reduce(x, variant=plan.variant, chain=plan.chain,
+                       m=plan.m)
+
+
+def _reduce_pallas(x, plan, **_):
+    from repro.kernels import mma_reduce
+    return mma_reduce(x, variant=plan.variant, chain=plan.chain,
+                      block_rows=plan.block_rows)
+
+
+def _reduce_vpu(x, plan, *, axis=None, **_):
+    return jnp.sum(_f32(x), axis=axis)
+
+
+def _sq_mma(x, plan, *, axis=None, **_):
+    from repro.core import reduction as R
+    if axis is None:
+        return R.tc_contract(x, x)
+    return R.tc_reduce_axes(x, axis, b=x)
+
+
+def _sq_chained(x, plan, **_):
+    xf = _f32(x)
+    return _reduce_chained(xf * xf, plan)
+
+
+def _sq_pallas(x, plan, **_):
+    from repro.kernels import mma_squared_sum
+    return mma_squared_sum(x, chain=plan.chain,
+                           block_rows=plan.block_rows)
+
+
+def _sq_vpu(x, plan, *, axis=None, **_):
+    xf = _f32(x)
+    return jnp.sum(xf * xf, axis=axis)
+
+
+def _masked_mean_with(reduce_run):
+    """Lift one reduce engine into the masked-mean op: numerator and
+    denominator both ride that engine; the all-masked denominator is
+    floored at 1 (so an empty mask yields 0, not NaN)."""
+    def run(values, plan, *, mask, **_):
+        num = reduce_run(values * mask, plan)
+        den = reduce_run(mask, plan)
+        return num / jnp.maximum(den, 1.0)
+    return run
+
+
+def _masked_mean_mma(values, plan, *, mask, **_):
+    # Fused form: the mask itself plays the ones-matrix role, so the
+    # numerator is a *single* contraction <values, mask>.
+    from repro.core import reduction as R
+    num = R.tc_contract(values, mask)
+    den = R.tc_contract(mask, jnp.ones_like(mask))
+    return num / jnp.maximum(den, 1.0)
+
+
+def _counts_mma(x, plan, **_):
+    from repro.core import reduction as R
+    return R.tc_reduce_rows(x.T)            # (E,) f32
+
+
+def _counts_vpu(x, plan, **_):
+    return jnp.sum(_f32(x), axis=0)
+
+
+# ---- scan family
+
+
+def _scan_chained(x, plan, *, axis=-1, inclusive=True, precision=None,
+                  **_):
+    from repro.core import scan as S
+    return S.tc_scan(x, axis=axis, inclusive=inclusive,
+                     variant=plan.variant, chain=plan.chain, m=plan.m,
+                     precision=precision)
+
+
+def _scan_pallas(x, plan, *, inclusive=True, **_):
+    from repro.kernels import mma_scan
+    return mma_scan(x, inclusive=inclusive, chain=plan.chain,
+                    block_rows=plan.block_rows)
+
+
+def _scan_vpu(x, plan, *, axis=-1, inclusive=True, **_):
+    from repro.core import scan as S
+    out = jnp.cumsum(_f32(x), axis=axis)
+    if not inclusive:
+        out = jnp.moveaxis(
+            S._shift_exclusive(jnp.moveaxis(out, axis, -1)), -1, axis)
+    return out
+
+
+# ---- segment family
+
+
+def _segment_mma(values, plan, *, segment_ids, num_segments, **_):
+    from repro.core import scan as S
+    return S.tc_segment_reduce(values, segment_ids, num_segments,
+                               m=plan.m)
+
+
+def _segment_pallas(values, plan, *, segment_ids, num_segments, **_):
+    from repro.kernels import mma_segment_sum
+    return mma_segment_sum(values, segment_ids, num_segments,
+                           block_rows=plan.block_rows)
+
+
+def _segment_vpu(values, plan, *, segment_ids, num_segments, **_):
+    import jax.ops
+    return jax.ops.segment_sum(
+        jnp.ravel(_f32(values)), jnp.ravel(segment_ids),
+        num_segments=num_segments)
+
+
+# ================================================= reference oracles
+#
+# The classic baseline IS each op's semantic reference (the paper
+# compares against it, and its engine runner is already pure jnp), so
+# the oracles are the vpu runners with the plan argument dropped — one
+# definition, no copy to drift out of sync.
+
+
+def _ref_reduce_sum(x, **kw):
+    return _reduce_vpu(x, None, **kw)
+
+
+def _ref_squared_sum(x, **kw):
+    return _sq_vpu(x, None, **kw)
+
+
+def _ref_masked_mean(values, *, mask, **_):
+    vm = _f32(values) * _f32(mask)
+    return jnp.sum(vm) / jnp.maximum(jnp.sum(_f32(mask)), 1.0)
+
+
+def _ref_expert_counts(x, **kw):
+    return _counts_vpu(x, None, **kw)
+
+
+def _ref_scan(x, **kw):
+    return _scan_vpu(x, None, **kw)
+
+
+def _ref_segment_sum(values, **kw):
+    return _segment_vpu(values, None, **kw)
+
+
+# ----------------------------------------------- measurement inputs
+#
+# Ops whose runners need more than one 1D operand declare how the
+# autotuner's measured sweep builds a representative problem of size n.
+
+
+def _measure_masked_mean(n, dtype, rng):
+    x = jnp.asarray(rng.standard_normal(n), dtype=jnp.float32)
+    mask = jnp.asarray(rng.random(n) > 0.5, dtype=jnp.float32)
+    return x.astype(dtype), {"mask": mask.astype(dtype)}
+
+
+def _measure_expert_counts(n, dtype, rng):
+    e = 128                                   # one MXU lane tile
+    t = max(n // e, 1)
+    onehot = jnp.eye(e, dtype=jnp.float32)[
+        jnp.asarray(rng.integers(0, e, t))]
+    return onehot.astype(dtype), {}
+
+
+# ==================================================== registrations
+#
+# Engine capability summary (the table docs/ARCHITECTURE.md renders):
+#   mma          geometry-free single contraction — distribution-safe,
+#                axis-aware (batched) for the reduce family.
+#   mma_chained  pure-JAX chained core.  Flatten-and-pad for reductions
+#                (single-device only, no axis subsets); reshapes ONLY
+#                the scan axis for scans (distribution-safe, batched).
+#   pallas       hand-tiled kernel: single-device, flatten-only.
+#   vpu          classic baseline: safe everywhere.
+
+_REDUCE_ENGINES = (
+    EngineSpec("mma", _reduce_mma, multi_device_safe=True,
+               axis_subsets=True),
+    EngineSpec("mma_chained", _reduce_chained, sweep=("chain",)),
+    EngineSpec("pallas", _reduce_pallas, sweep=("chain", "block_rows")),
+    EngineSpec("vpu", _reduce_vpu, multi_device_safe=True,
+               axis_subsets=True),
+)
+
+register(OpSpec(
+    name="reduce_sum", family="reduce", engines=_REDUCE_ENGINES,
+    reference=_ref_reduce_sum))
+
+register(OpSpec(
+    name="squared_sum", family="reduce",
+    engines=(
+        EngineSpec("mma", _sq_mma, multi_device_safe=True,
+                   axis_subsets=True),
+        EngineSpec("mma_chained", _sq_chained, sweep=("chain",)),
+        EngineSpec("pallas", _sq_pallas, sweep=("chain", "block_rows")),
+        EngineSpec("vpu", _sq_vpu, multi_device_safe=True,
+                   axis_subsets=True),
+    ),
+    reference=_ref_squared_sum))
+
+register(OpSpec(
+    name="masked_mean", family="reduce",
+    engines=(
+        EngineSpec("mma", _masked_mean_mma, multi_device_safe=True),
+        EngineSpec("mma_chained", _masked_mean_with(_reduce_chained),
+                   sweep=("chain",)),
+        EngineSpec("pallas", _masked_mean_with(_reduce_pallas),
+                   sweep=("chain", "block_rows")),
+        EngineSpec("vpu", _masked_mean_with(_reduce_vpu),
+                   multi_device_safe=True),
+    ),
+    reference=_ref_masked_mean, measure=_measure_masked_mean))
+
+register(OpSpec(
+    name="expert_counts", family="reduce",
+    engines=(
+        EngineSpec("mma", _counts_mma, multi_device_safe=True, ndim=2),
+        EngineSpec("vpu", _counts_vpu, multi_device_safe=True, ndim=2),
+    ),
+    reference=_ref_expert_counts, measure=_measure_expert_counts))
+
+_SCAN_ENGINES = (
+    EngineSpec("mma_chained", _scan_chained, multi_device_safe=True,
+               sweep=("chain",)),
+    EngineSpec("pallas", _scan_pallas, needs_flat=True,
+               sweep=("chain", "block_rows")),
+    EngineSpec("vpu", _scan_vpu, multi_device_safe=True),
+)
+
+register(OpSpec(
+    name="scan", family="scan", engines=_SCAN_ENGINES,
+    aliases={"mma": "mma_chained"}, reference=_ref_scan,
+    size_of=lambda x, kw: x.shape[kw.get("axis", -1)]))
+
+register(OpSpec(
+    name="masked_cumsum", family="scan", engines=_SCAN_ENGINES,
+    aliases={"mma": "mma_chained"}, reference=_ref_scan,
+    size_of=lambda x, kw: x.shape[kw.get("axis", -1)]))
+
+register(OpSpec(
+    name="segment_sum", family="segment",
+    engines=(
+        EngineSpec("mma", _segment_mma, multi_device_safe=True),
+        EngineSpec("pallas", _segment_pallas,
+                   sweep=("block_rows",)),
+        EngineSpec("vpu", _segment_vpu, multi_device_safe=True),
+    ),
+    aliases={"mma_chained": "mma"}, reference=_ref_segment_sum))

@@ -1,106 +1,129 @@
 """Framework hooks: every arithmetic reduction in the training/serving
 stack routes through the paper's MMA encoding via these helpers.
 
+Each hook is a thin, semantically-named wrapper over ONE dispatch path
+— ``repro.core.dispatch.dispatch(op, x, method=..., **op_kwargs)`` —
+where the op's registry entry declares its engines, their capability
+predicates, and the autotuner hooks.  There are no per-op ``method``
+ladders here (``scripts/check.sh`` enforces that structurally).
+
 ``method`` selection:
   'auto'   consult the autotuner's plan registry (repro.core.autotune)
            for this (op, n, dtype, backend) and dispatch to the winning
-           engine/geometry — no hardcoded chain/block_rows anywhere on
-           this path.
-  'mma'    pure-JAX chained ones-MMA (repro.core.reduction) — safe under
+           engine/geometry — restricted to the engines whose capability
+           predicates accept this input and mesh.
+  'mma'    pure-JAX ones-contraction (repro.core.reduction) — safe under
            pjit/shard_map, lowers to MXU matmuls on TPU.  Default.
-  'mma_chained' the explicitly R-chained tc_reduce core (paper-
-           structured; benchmark/ablation path).
+           (For the scan family this spelling is an alias of the
+           chained triangular core — a scan has no single-contraction
+           form.)
+  'mma_chained' the explicitly R-chained tc_reduce/tc_scan cores
+           (paper-structured; benchmark/ablation path).
   'pallas' hand-tiled Pallas kernel (repro.kernels) — single-device hot
            paths; interpret=True on CPU.
-  'vpu'    plain jnp.sum in f32 — the classic-reduction baseline the
-           paper compares against (and the ablation switch).
+  'vpu'    plain jnp ops in f32 — the classic baseline the paper
+           compares against (and the ablation switch).
+
+An engine an op does not declare — or one whose predicates reject the
+call (axis-subset reductions on a flatten-only engine, Pallas under a
+multi-device mesh, …) — raises ``ValueError`` naming the reason.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import autotune
-from repro.core import reduction as R
+from repro.core import dispatch
 
 Method = Literal["auto", "mma", "mma_chained", "pallas", "vpu"]
 
 
-def _auto_engine():
-    """Engine restriction for the 'auto' hooks.
-
-    On a single device every engine is legal.  Under a live multi-device
-    mesh only the ones-contraction and VPU forms are distribution-safe —
-    the chained/Pallas engines flatten-and-pad, which forces a re-layout
-    of sharded activations (and miscompiles on some XLA versions, see
-    reduction.tc_reduce_lastdim) — so auto restricts itself to them.
-    """
-    from repro.distributed import sharding as shd
-    mesh = shd.current_mesh()
-    if mesh is not None and math.prod(mesh.devices.shape) > 1:
-        return ("mma", "vpu")
-    return None
-
-
-def _contract_all(a, b) -> jax.Array:
-    """Full contraction <a, b> as one dot_general (f32 accumulation).
-
-    This is the sharding-safe form of the paper's ones-MMA encoding: the
-    reduction is expressed as a matrix-unit contraction instead of a
-    vector-lane sum, *without reshaping* — so under pjit the partitioner
-    lowers it to a local MXU contraction + one psum, no re-layout.
-    """
-    dims = tuple(range(a.ndim))
-    return jax.lax.dot_general(
-        a, b, dimension_numbers=((dims, dims), ((), ())),
-        preferred_element_type=jnp.float32)
+def _norm_axes(axis, ndim: int) -> Optional[tuple]:
+    """Normalise an ``axis`` argument to a sorted tuple of non-negative
+    ints — or None for a full (flatten) reduction, which every engine
+    can serve.  Out-of-range axes raise (``jnp.sum`` semantics), they
+    are never silently wrapped; an empty tuple stays empty (reduce
+    over no axes)."""
+    if axis is None:
+        return None
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    for a in axes:
+        if not -ndim <= a < ndim:
+            raise ValueError(
+                f"axis {a} is out of bounds for an ndim-{ndim} input")
+    axes = tuple(sorted(a % ndim for a in axes))
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"duplicate reduction axes: {axis!r}")
+    return None if axes and len(axes) == ndim else axes
 
 
-def reduce_sum(x, *, method: Method = "mma", chain: int = 4) -> jax.Array:
-    """Sum of all elements, f32 scalar.
+def _keepdims(out, axes: Optional[tuple], ndim: int, keepdims: bool):
+    if not keepdims:
+        return out
+    if axes is None:
+        return jnp.reshape(out, (1,) * ndim)
+    return jnp.expand_dims(out, axes)
+
+
+def reduce_sum(x, *, axis=None, keepdims: bool = False,
+               method: Method = "mma", chain: int = 4) -> jax.Array:
+    """Sum over ``axis`` (None = all elements), f32.
 
     'auto' selects a cached ReductionPlan (engine + chain + block_rows)
     from the autotuner; 'mma' uses the ones-contraction form
-    (distribution-safe); the explicitly-chained tc_reduce and the Pallas
-    kernel are the paper-structured single-device paths.
+    (distribution-safe, and the only MMA engine that serves *batched*
+    axis-subset reductions — ``tc_reduce_lastdim`` for the last dim,
+    the batched ones-contraction ``tc_reduce_axes`` otherwise); the
+    explicitly-chained tc_reduce and the Pallas kernel are the
+    flatten-only paper-structured single-device paths.
 
     >>> float(reduce_sum(jnp.ones((2, 8))))
     16.0
     >>> float(reduce_sum(jnp.arange(4.0), method="vpu"))
     6.0
+    >>> import numpy as np
+    >>> np.asarray(reduce_sum(jnp.ones((2, 8)), axis=-1)).tolist()
+    [8.0, 8.0]
+    >>> reduce_sum(jnp.ones((2, 8)), axis=0, keepdims=True).shape
+    (1, 8)
     """
-    if method == "auto":
-        plan = autotune.get_plan(x.size, x.dtype, op="reduce_sum",
-                                 engine=_auto_engine())
-        return autotune.execute_plan(x, plan)
-    if method == "mma":
-        return _contract_all(x, jnp.ones_like(x))
-    if method == "mma_chained":
-        return R.tc_reduce(x, variant="single_pass", chain=chain)
-    if method == "pallas":
-        from repro.kernels import mma_reduce
-        return mma_reduce(x, variant="single_pass", chain=chain)
-    if method == "vpu":
-        return jnp.sum(x.astype(jnp.float32))
-    raise ValueError(f"unknown reduction method: {method!r}")
+    axes = _norm_axes(axis, x.ndim)
+    if axes == ():                  # reduce over no axes (jnp semantics)
+        return x.astype(jnp.float32)
+    out = dispatch.dispatch("reduce_sum", x, method=method, chain=chain,
+                            axis=axes)
+    return _keepdims(out, axes, x.ndim, keepdims)
 
 
-def reduce_mean(x, *, method: Method = "mma") -> jax.Array:
-    return reduce_sum(x, method=method) / x.size
+def reduce_mean(x, *, axis=None, keepdims: bool = False,
+                method: Method = "mma") -> jax.Array:
+    """Mean over ``axis`` (None = all elements), f32.
+
+    >>> import numpy as np
+    >>> np.asarray(reduce_mean(jnp.ones((4, 8)), axis=1)).tolist()
+    [1.0, 1.0, 1.0, 1.0]
+    """
+    axes = _norm_axes(axis, x.ndim)
+    count = x.size if axes is None \
+        else math.prod(x.shape[a] for a in axes)
+    return reduce_sum(x, axis=axis, keepdims=keepdims,
+                      method=method) / count
 
 
-def masked_mean(values, mask, *, method: Method = "mma") -> jax.Array:
+def masked_mean(values, mask, *, method: Method = "mma",
+                chain: int = 4) -> jax.Array:
     """mean of values where mask==1 — the token-loss reduction.
 
     In 'mma' form the numerator is a *single* contraction <values, mask>
     (the mask plays the ones-matrix role), and the denominator is
-    <mask, ones>.  'auto' keeps that fused form when the plan picks the
-    contraction engine, otherwise reduces values*mask under the plan.
+    <mask, ones>.  Every other engine reduces values*mask and mask
+    separately under the same plan.  All-masked inputs yield 0 (the
+    denominator is floored at 1).
 
     >>> v = jnp.asarray([1.0, 2.0, 30.0, 40.0])
     >>> m = jnp.asarray([1.0, 1.0, 0.0, 0.0])
@@ -110,42 +133,26 @@ def masked_mean(values, mask, *, method: Method = "mma") -> jax.Array:
     0.0
     """
     mask = mask.astype(values.dtype)
-    if method == "auto":
-        plan = autotune.get_plan(values.size, values.dtype,
-                                 op="masked_mean", engine=_auto_engine())
-        if plan.method == "mma":
-            num = _contract_all(values, mask)
-            den = _contract_all(mask, jnp.ones_like(mask))
-        else:
-            num = autotune.execute_plan(values * mask, plan)
-            den = autotune.execute_plan(mask, plan)
-    elif method == "mma":
-        num = _contract_all(values, mask)
-        den = _contract_all(mask, jnp.ones_like(mask))
-    else:
-        num = reduce_sum(values * mask, method=method)
-        den = reduce_sum(mask, method=method)
-    return num / jnp.maximum(den, 1.0)
+    return dispatch.dispatch("masked_mean", values, method=method,
+                             chain=chain, mask=mask)
 
 
-def squared_sum(x, *, method: Method = "mma") -> jax.Array:
-    """sum(x^2) — grad-norm building block.
+def squared_sum(x, *, axis=None, keepdims: bool = False,
+                method: Method = "mma", chain: int = 4) -> jax.Array:
+    """sum(x^2) over ``axis`` (None = all) — grad-norm building block.
 
     'mma' form: <x, x> as one dot_general — the reduction rides the MXU
-    with x itself standing in for the ones matrix.  'pallas' uses the
+    with x itself standing in for the ones matrix (batched over the
+    surviving axes when ``axis`` is given).  'pallas' uses the
     hand-tiled chained-MMA kernel (kernels.mma_squared_sum).  'auto'
     dispatches whatever engine the plan registry tuned for this size."""
-    if method == "auto":
-        plan = autotune.get_plan(x.size, x.dtype, op="squared_sum",
-                                 engine=_auto_engine())
-        return autotune.execute_plan(x, plan, square=True)
-    if method == "mma":
-        return _contract_all(x, x)
-    if method == "pallas":
-        from repro.kernels import mma_squared_sum
-        return mma_squared_sum(x)
-    xf = x.astype(jnp.float32)
-    return reduce_sum(xf * xf, method=method)
+    axes = _norm_axes(axis, x.ndim)
+    if axes == ():                  # reduce over no axes (jnp semantics)
+        xf = x.astype(jnp.float32)
+        return xf * xf
+    out = dispatch.dispatch("squared_sum", x, method=method,
+                            chain=chain, axis=axes)
+    return _keepdims(out, axes, x.ndim, keepdims)
 
 
 def global_norm(tree, *, method: Method = "mma") -> jax.Array:
@@ -158,24 +165,6 @@ def global_norm(tree, *, method: Method = "mma") -> jax.Array:
     return jnp.sqrt(total)
 
 
-def _scan_auto_engine(x, axis: int):
-    """Engine restriction for the scan-family 'auto' hooks.
-
-    The Pallas scan kernel owns only the flattened-1D single-device hot
-    path; batched/multi-axis scans go to the pure-JAX triangular-MMA
-    core (which reshapes nothing but the scan axis, so batch shardings
-    survive) or the VPU baseline.  Under a live multi-device mesh the
-    Pallas engine is excluded for the same flatten-and-pad reasons as
-    in ``_auto_engine``.
-    """
-    from repro.distributed import sharding as shd
-    mesh = shd.current_mesh()
-    multi = mesh is not None and math.prod(mesh.devices.shape) > 1
-    if multi or x.ndim > 1:
-        return ("mma_chained", "vpu")
-    return None
-
-
 def cumsum(x, *, axis: int = -1, inclusive: bool = True,
            method: Method = "mma", chain: int = 4,
            precision=None) -> jax.Array:
@@ -183,45 +172,29 @@ def cumsum(x, *, axis: int = -1, inclusive: bool = True,
 
     'mma'/'mma_chained' run the chained triangular-MMA scan
     (``repro.core.scan.tc_scan`` — the Dakkak-style tensor-core scan);
-    'pallas' the hand-tiled kernel (flattened-1D inputs); 'vpu' the
-    classic ``jnp.cumsum`` baseline; 'auto' dispatches the plan the
-    registry tuned for (op='scan', n, dtype, backend).
+    'pallas' the hand-tiled kernel (flattened-1D inputs only — its
+    capability predicate rejects batched inputs); 'vpu' the classic
+    ``jnp.cumsum`` baseline; 'auto' dispatches the plan the registry
+    tuned for (op='scan', n, dtype, backend) over the legal engines.
     ``inclusive=False`` gives the exclusive scan (leading zero).
     ``precision`` reaches the MMA engines (pin
     ``jax.lax.Precision.HIGHEST`` for integer-exact prefixes on TPU).
     """
-    from repro.core import scan as S
-    if method == "auto":
-        plan = autotune.get_plan(x.shape[axis], x.dtype, op="scan",
-                                 engine=_scan_auto_engine(x, axis))
-        return autotune.execute_scan_plan(x, plan, axis=axis,
-                                          inclusive=inclusive)
-    if method in ("mma", "mma_chained"):
-        return S.tc_scan(x, axis=axis, inclusive=inclusive, chain=chain,
-                         precision=precision)
-    if method == "pallas":
-        plan = autotune.ReductionPlan(method="pallas", chain=chain)
-        return autotune.execute_scan_plan(x, plan, axis=axis,
-                                          inclusive=inclusive)
-    if method == "vpu":
-        return autotune._vpu_scan(x, axis=axis, inclusive=inclusive)
-    raise ValueError(f"unknown scan method: {method!r}")
+    return dispatch.dispatch("scan", x, method=method, chain=chain,
+                             axis=axis, inclusive=inclusive,
+                             precision=precision)
 
 
 def masked_cumsum(values, mask, *, axis: int = -1,
                   inclusive: bool = True,
-                  method: Method = "mma") -> jax.Array:
+                  method: Method = "mma", chain: int = 4) -> jax.Array:
     """Prefix sum of ``values`` where ``mask == 1`` (masked-out
     positions contribute 0 but still receive the running prefix) — the
     packed-position / token-budget scan.  f32, same shape."""
     masked = values.astype(jnp.float32) * mask.astype(jnp.float32)
-    if method == "auto":
-        plan = autotune.get_plan(masked.shape[axis], masked.dtype,
-                                 op="masked_cumsum",
-                                 engine=_scan_auto_engine(masked, axis))
-        return autotune.execute_scan_plan(masked, plan, axis=axis,
-                                          inclusive=inclusive)
-    return cumsum(masked, axis=axis, inclusive=inclusive, method=method)
+    return dispatch.dispatch("masked_cumsum", masked, method=method,
+                             chain=chain, axis=axis,
+                             inclusive=inclusive)
 
 
 def segment_sum(values, segment_ids, num_segments: int, *,
@@ -234,38 +207,17 @@ def segment_sum(values, segment_ids, num_segments: int, *,
     scatter-add baseline; 'auto' consults the registry under
     op='segment_sum'.  Empty segments are 0.  (num_segments,) f32.
     """
-    if method == "auto":
-        plan = autotune.get_plan(values.size, values.dtype,
-                                 op="segment_sum",
-                                 engine=_auto_engine())
-        return autotune.execute_segment_plan(values, segment_ids,
-                                             num_segments, plan)
-    if method in ("mma", "mma_chained"):
-        from repro.core import scan as S
-        return S.tc_segment_reduce(values, segment_ids, num_segments)
-    if method == "pallas":
-        from repro.kernels import mma_segment_sum
-        return mma_segment_sum(values, segment_ids, num_segments)
-    if method == "vpu":
-        import jax.ops
-        return jax.ops.segment_sum(
-            jnp.ravel(values).astype(jnp.float32),
-            jnp.ravel(segment_ids), num_segments=num_segments)
-    raise ValueError(f"unknown segment_sum method: {method!r}")
+    return dispatch.dispatch("segment_sum", values, method=method,
+                             segment_ids=segment_ids,
+                             num_segments=num_segments)
 
 
 def expert_counts(router_probs_onehot, *, method: Method = "mma"):
     """Tokens-per-expert from a (tokens, experts) one-hot/weight matrix:
-    counts = [1]_{1 x T} x onehot — a single ones-MMA (load-balance loss).
+    counts = [1]_{1 x T} x onehot — a single ones-MMA (load-balance
+    loss).  A row-wise op: its registry entry declares exactly the
+    contraction and VPU engines, so any other ``method`` raises
+    ``ValueError`` instead of silently misrouting.
     """
-    if method == "auto":
-        # Row-wise op: only the contraction and VPU engines apply, so
-        # the sweep is restricted to them — the plan's method IS what
-        # runs (no geometry fields are involved for either engine).
-        plan = autotune.get_plan(router_probs_onehot.size,
-                                 router_probs_onehot.dtype,
-                                 op="expert_counts", engine=("mma", "vpu"))
-        method = plan.method
-    if method == "vpu":
-        return jnp.sum(router_probs_onehot.astype(jnp.float32), axis=0)
-    return R.tc_reduce_rows(router_probs_onehot.T)  # (E,) f32
+    return dispatch.dispatch("expert_counts", router_probs_onehot,
+                             method=method)

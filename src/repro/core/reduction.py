@@ -149,6 +149,50 @@ def _tc_reduce_impl(x, *, variant: Variant, chain: int, m: int,
     raise ValueError(f"unknown variant: {variant!r}")
 
 
+def tc_contract(a, b) -> jax.Array:
+    """Full contraction <a, b> as one dot_general (f32 accumulation).
+
+    This is the sharding-safe form of the paper's ones-MMA encoding: the
+    reduction is expressed as a matrix-unit contraction instead of a
+    vector-lane sum, *without reshaping* — so under pjit the partitioner
+    lowers it to a local MXU contraction + one psum, no re-layout.  With
+    ``b = ones_like(a)`` this is the plain sum; ``b = mask`` gives the
+    masked numerator; ``b = a`` the squared sum.
+    """
+    dims = tuple(range(a.ndim))
+    return lax.dot_general(
+        a, b, dimension_numbers=((dims, dims), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def tc_reduce_axes(x, axes: tuple, *, b=None) -> jax.Array:
+    """Contraction over an axis subset: sum x*b over ``axes``, f32.
+
+    The batched generalisation of ``tc_contract``/``tc_reduce_lastdim``:
+    the reduced axes become the contracting dims of a single dot_general
+    and every other axis is a *batch* dim — no reshape, no tile
+    padding, so the surviving dims keep exactly the layout (and
+    sharding) the caller gave them.  ``b=None`` contracts against a
+    ones matrix (the plain batched sum, routed through the proven
+    ``tc_reduce_lastdim`` fast path for the last-dim subset); ``b=x``
+    gives the batched squared sum.  ``axes`` must be a non-empty tuple
+    of non-negative ints; output dims preserve the relative order of
+    the surviving axes (``jnp.sum`` semantics, keepdims=False).
+    """
+    axes = tuple(sorted(axes))
+    if b is None:
+        if axes == (x.ndim - 1,):
+            return tc_reduce_lastdim(x)   # proven reshape-free fast path
+        b = jnp.ones_like(x)
+    if len(axes) == x.ndim:
+        return tc_contract(x, b)
+    batch = tuple(i for i in range(x.ndim) if i not in axes)
+    return lax.dot_general(
+        x, b,
+        dimension_numbers=((axes, axes), (batch, batch)),
+        preferred_element_type=jnp.float32)
+
+
 @jax.jit
 def tc_reduce_lastdim(x) -> jax.Array:
     """Ones-contraction over the last dim: (..., d) -> (...) f32 sums.

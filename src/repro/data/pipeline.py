@@ -30,8 +30,11 @@ class RunningStats:
     """Streaming statistics over the batch stream, on the MMA fast path.
 
     Per-step scalars (valid-token count, mask density) are reduced with
-    the paper's ones-MMA encoding (``integration.reduce_sum``), and the
-    cross-step cumulative token budget is a triangular-MMA prefix scan
+    the paper's ones-MMA encoding (``integration.reduce_sum``), the
+    per-sequence fill profile is an axis-aware *batched* reduction over
+    the sequence axis (``integration.reduce_sum(mask, axis=-1)`` — one
+    ones-contraction per batch row, no reshape), and the cross-step
+    cumulative token budget is a triangular-MMA prefix scan
     (``integration.cumsum``) over the recorded history — the
     data-pipeline consumer of the scan subsystem.  All accumulators
     follow the f32 precision contract.
@@ -40,6 +43,8 @@ class RunningStats:
     def __init__(self, *, method: str = "mma"):
         self.method = method
         self._tokens_per_step: list[float] = []
+        self._min_fill: float = float("inf")
+        self._max_fill: float = 0.0
 
     @property
     def steps(self) -> int:
@@ -47,9 +52,24 @@ class RunningStats:
 
     def update(self, batch: dict) -> float:
         """Record one batch; returns its valid-token count."""
+        from repro.core import dispatch
         from repro.core import integration as ci
         mask = jax.numpy.asarray(batch["mask"])
-        tokens = float(ci.reduce_sum(mask, method=self.method))
+        if mask.ndim >= 2:
+            # ONE per-row reduction serves both statistics (the token
+            # count is the fills' sum — no second device round-trip).
+            # Flatten-only engines cannot serve the axis-subset form;
+            # the stats keep flowing on the classic baseline.
+            row_method = dispatch.resolve_method(
+                "reduce_sum", mask, self.method, fallback="vpu",
+                axis=(mask.ndim - 1,))
+            fills = np.asarray(
+                ci.reduce_sum(mask, axis=-1, method=row_method))
+            self._min_fill = min(self._min_fill, float(fills.min()))
+            self._max_fill = max(self._max_fill, float(fills.max()))
+            tokens = float(fills.sum())
+        else:
+            tokens = float(ci.reduce_sum(mask, method=self.method))
         self._tokens_per_step.append(tokens)
         return tokens
 
@@ -74,8 +94,12 @@ class RunningStats:
         mean = total / self.steps
         sq = float(ci.squared_sum(hist, method=self.method))
         var = max(sq / self.steps - mean * mean, 0.0)
-        return {"steps": self.steps, "total_tokens": total,
-                "mean_tokens": mean, "std_tokens": float(np.sqrt(var))}
+        out = {"steps": self.steps, "total_tokens": total,
+               "mean_tokens": mean, "std_tokens": float(np.sqrt(var))}
+        if self._max_fill > 0.0:
+            out["min_seq_tokens"] = self._min_fill
+            out["max_seq_tokens"] = self._max_fill
+        return out
 
 
 def mask_positions(mask) -> jax.Array:

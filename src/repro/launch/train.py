@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, TrainConfig
+from repro.core import integration as ci
 from repro.data.pipeline import SyntheticLMData
 from repro.distributed import sharding as shd
 from repro.distributed.fault_tolerance import TrainSupervisor
@@ -118,7 +119,19 @@ def make_train_step(model, tconf: TrainConfig, mesh=None):
                 weight_decay=tconf.weight_decay,
                 grad_clip=tconf.grad_clip,
                 reduce_method=cfg.reduce_method)
-        metrics = dict(metrics, **om, lr=lr, loss=loss)
+            # Post-step parameter norm on the same registry-dispatched
+            # reduction path as the grad norm (per-leaf tuned plans
+            # under method='auto'; one <x, x> contraction per leaf).
+            # Ablation engines the per-leaf reduction cannot serve
+            # under this mesh resolve to the safe contraction.
+            from repro.core import dispatch
+            pn_method = dispatch.resolve_method(
+                "squared_sum",
+                jax.tree_util.tree_leaves(new_params)[0],
+                cfg.reduce_method, fallback="mma")
+            pnorm = ci.global_norm(new_params, method=pn_method)
+        metrics = dict(metrics, **om, lr=lr, loss=loss,
+                       param_norm=pnorm)
         return TrainState(new_params, new_opt, state.step + 1), metrics
 
     def make_init_state(key) -> TrainState:

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import reduction as tcred
+from repro.core import integration as ci
 from repro.distributed.sharding import constrain
 from repro.models.param import Param
 
@@ -17,27 +17,35 @@ def rmsnorm_specs(d: int):
     return {"scale": Param((d,), ("embed_no_fsdp",), "zeros")}
 
 
-def rmsnorm(params, x, *, eps: float = 1e-6, use_mma: bool = True,
+def rmsnorm(params, x, *, eps: float = 1e-6, method: str = "mma",
             fast_apply: bool = False):
     """RMSNorm with (1+scale) weighting (gemma convention, scale init 0).
 
-    The mean-of-squares row statistic is an arithmetic reduction — with
-    ``use_mma`` it is computed by the paper's ones-MMA encoding
-    (tc_reduce_rows) so the statistic runs on the matrix unit.
+    The mean-of-squares row statistic is an axis-aware batched
+    reduction on the TC-op registry path
+    (``integration.reduce_sum(axis=-1)``): under ``method='mma'`` the
+    'mma' engine serves the last-dim subset with the in-place batched
+    ones-contraction (``tc_reduce_lastdim`` — no (-1, d) reshape, so
+    the activation keeps its (batch, seq) sharding), and
+    ``method='vpu'`` is the classic jnp baseline.  An engine that
+    cannot serve the per-row statistic (the flatten-only ablation
+    engines 'pallas'/'mma_chained', or an unknown spelling) falls back
+    to the classic baseline — a model must stay trainable under every
+    ``reduce_method`` ablation, so the norm maps the knob instead of
+    failing the forward pass.
 
     ``fast_apply`` (§Perf): the statistic stays f32, but the
     normalisation multiply runs in the input dtype — removes two f32
     round-trips over the (B, S, D) stream per norm.
     """
+    from repro.core import dispatch
     d = x.shape[-1]
     xf = x.astype(jnp.float32)
-    if use_mma:
-        # In-place batched ones-contraction: no (-1, d) reshape — the
-        # activation keeps its (batch, seq) sharding (see
-        # tc_reduce_lastdim for why the reshape form is unsafe here).
-        ms = tcred.tc_reduce_lastdim(xf * xf)[..., None] / d
-    else:
-        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    method = dispatch.resolve_method("reduce_sum", xf, method,
+                                     fallback="vpu",
+                                     axis=(x.ndim - 1,))
+    ms = ci.reduce_sum(xf * xf, axis=-1, keepdims=True,
+                       method=method) / d
     rstd = jax.lax.rsqrt(ms + eps)
     if fast_apply:
         w = (1.0 + params["scale"].astype(jnp.float32)).astype(x.dtype)
@@ -66,11 +74,11 @@ def norm_specs(d: int, kind: str = "rmsnorm"):
     return layernorm_specs(d) if kind == "layernorm" else rmsnorm_specs(d)
 
 
-def apply_norm(params, x, *, kind: str = "rmsnorm", use_mma: bool = True,
-               fast_apply: bool = False):
+def apply_norm(params, x, *, kind: str = "rmsnorm",
+               method: str = "mma", fast_apply: bool = False):
     if kind == "layernorm":
         return layernorm(params, x)
-    return rmsnorm(params, x, use_mma=use_mma, fast_apply=fast_apply)
+    return rmsnorm(params, x, method=method, fast_apply=fast_apply)
 
 
 # ---------------------------------------------------------------- MLP

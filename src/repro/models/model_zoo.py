@@ -87,7 +87,7 @@ def _mtp_loss(params, cfg, hidden, tokens, labels, mask):
     z, _, _ = T.block_apply(mp["block"], cfg, desc, z, None,
                             positions=jnp.arange(s, dtype=jnp.int32))
     z = L.apply_norm(mp["norm"], z, kind=cfg.norm_type,
-                     use_mma=cfg.reduce_method == "mma")
+                     method=cfg.reduce_method)
     logits = T.logits_from_hidden(params, cfg, z)
     # labels for t+2 = labels shifted left by one
     lbl = labels[:, 1:]

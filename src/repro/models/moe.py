@@ -82,11 +82,19 @@ def _aux_loss(cfg, probs, ids):
     """Load-balance loss (Switch-style): E * <f, p>.
 
     f (fraction of tokens to each expert) is computed from the one-hot
-    assignment with the paper's ones-MMA contraction (expert_counts)."""
+    assignment with the paper's ones-MMA contraction (expert_counts —
+    a TC-op registry entry that declares only the contraction and VPU
+    engines, so a misconfigured ``reduce_method`` raises instead of
+    silently misrouting the row reduction)."""
     e = cfg.moe.num_experts
     onehot = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)
-    counts = ci.expert_counts(onehot,
-                              method=cfg.reduce_method)      # (E,)
+    # expert_counts declares only the contraction/VPU engines; the
+    # flatten-only ablation spellings map to the MMA row reduction
+    # (what they always ran) instead of failing the forward pass.
+    from repro.core import dispatch
+    method = dispatch.resolve_method("expert_counts", onehot,
+                                     cfg.reduce_method, fallback="mma")
+    counts = ci.expert_counts(onehot, method=method)         # (E,)
     f = counts / jnp.maximum(jnp.sum(counts), 1.0)
     p = jnp.mean(probs, axis=0)
     return e * jnp.sum(f * p)

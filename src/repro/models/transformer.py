@@ -151,7 +151,7 @@ def init_block_cache(cfg, desc: LayerDesc, batch: int, capacity: int,
 
 def _norm(p, x, cfg):
     return L.apply_norm(p, x, kind=cfg.norm_type,
-                        use_mma=cfg.reduce_method == "mma",
+                        method=cfg.reduce_method,
                         fast_apply=getattr(cfg, "fast_norm", False))
 
 

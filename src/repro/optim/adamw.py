@@ -45,7 +45,15 @@ def state_axes(param_axes) -> AdamWState:
 
 def clip_by_global_norm(grads, max_norm: float, *, method: str = "mma"):
     """Returns (clipped grads, pre-clip norm). The norm is the paper's
-    MMA-encoded reduction."""
+    MMA-encoded reduction.  Engines the per-leaf squared_sum cannot
+    serve here (the flatten-only ablation spellings under a live
+    multi-device mesh) resolve to the distribution-safe contraction —
+    training must survive every reduce_method ablation."""
+    from repro.core import dispatch
+    leaves = jax.tree_util.tree_leaves(grads)
+    if leaves:
+        method = dispatch.resolve_method("squared_sum", leaves[0],
+                                         method, fallback="mma")
     norm = ci.global_norm(grads, method=method)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
     return jax.tree_util.tree_map(

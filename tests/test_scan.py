@@ -269,7 +269,7 @@ def test_every_emittable_scan_plan_matches(fresh_plan_registry):
         x = jnp.asarray(rng.normal(size=n).astype(np.float32))
         want = np.cumsum(np.asarray(x), dtype=np.float64)
         for plan in autotune.candidate_plans(n, x.dtype, op="scan"):
-            got = np.asarray(autotune.execute_scan_plan(x, plan))
+            got = np.asarray(autotune.execute_plan(x, plan, op="scan"))
             np.testing.assert_allclose(
                 got, want, atol=_tol(jnp.float32, n), rtol=1e-4,
                 err_msg=str(plan))
@@ -282,7 +282,8 @@ def test_every_emittable_segment_plan_matches(fresh_plan_registry):
     ids = jnp.asarray(rng.integers(0, 37, size=n).astype(np.int32))
     want = np.asarray(ref.segment_sum_ref(v, ids, 37))
     for plan in autotune.candidate_plans(n, v.dtype, op="segment_sum"):
-        got = np.asarray(autotune.execute_segment_plan(v, ids, 37, plan))
+        got = np.asarray(autotune.execute_plan(
+            v, plan, op="segment_sum", segment_ids=ids, num_segments=37))
         np.testing.assert_allclose(got, want, atol=1e-3,
                                    err_msg=str(plan))
 
