@@ -17,6 +17,9 @@
 #            dispatch.py).  Every other module must route through
 #            repro.core.dispatch.dispatch() — a grep hit here means a
 #            new per-op ladder crept back in;
+#   bytecode structural guard: no __pycache__/ or *.pyc path may be
+#            git-tracked (.gitignore keeps new ones out; this catches
+#            anything force-added or resurrected);
 #   docs     scripts/check_docs.py — markdown links/anchors resolve and
 #            every backticked `repro.*` symbol / repo path in README +
 #            docs/ maps to real code (broken cross-references fail
@@ -43,6 +46,14 @@ if grep -rn "method ==" src --include='*.py' \
     exit 1
 fi
 echo "ok: engine selection only inside the TC-op registry"
+
+echo "== tracked-bytecode guard =="
+if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
+    echo "FAIL: compiled bytecode is git-tracked —" \
+         "git rm --cached the paths above" >&2
+    exit 1
+fi
+echo "ok: no git-tracked __pycache__/*.pyc paths"
 
 echo "== docs =="
 python scripts/check_docs.py

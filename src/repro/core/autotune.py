@@ -15,8 +15,8 @@ module makes that selection automatic:
     style: PRAM depth (Eq. 24) + work/parallelism + per-grid-step
     overhead + padding waste — so a plan exists even with no hardware;
   * ``PlanRegistry``      caches winners keyed by (op, n-bucket, dtype,
-    backend), survives a JSON round-trip, and can be pre-seeded from a
-    file (``REPRO_AUTOTUNE_CACHE``);
+    backend[, engine][, mesh-signature]), survives a JSON round-trip,
+    and can be pre-seeded from a file (``REPRO_AUTOTUNE_CACHE``);
   * ``get_plan``          the one-call entry the framework hooks
     (``integration.reduce_sum(method="auto")`` etc.) consult.
 
@@ -34,6 +34,17 @@ Problem sizes are bucketed to the next power of two so one tuned plan
 serves every n in its octave — the paper's curves are smooth in n, and
 this keeps the registry (and the number of compiled kernel variants)
 small.
+
+Plans are **mesh-aware**: under a live >1-device mesh the key carries a
+mesh signature (``mesh_signature`` — axis names + sizes, e.g.
+``data4.model2``) and the sweep tunes the *local per-device* chain
+geometry of the size-n global problem (model mode scores the n/D
+shard + a cross-mesh combine term; measure mode times the local
+execute + hierarchical scalar combine under ``shard_map``).  This is
+how the paper's one-f32-partial-per-block design scales past the
+device boundary: each device is a "block" producing a single f32
+partial, and ``repro.distributed.tc_collectives`` folds them with the
+``hierarchical_psum`` tree.
 """
 
 from __future__ import annotations
@@ -43,6 +54,7 @@ import functools
 import json
 import math
 import os
+import re
 import time
 from typing import Iterator, Optional
 
@@ -97,6 +109,70 @@ def bucket_n(n: int) -> int:
 # engine; a tuple of method names = any of those.
 Engine = Optional[object]
 
+# mesh argument: None = single device; a jax Mesh (or anything with an
+# ordered .shape mapping), an ((axis_name, size), ...) tuple, or a
+# signature string ("data4.model2").
+MeshArg = Optional[object]
+
+
+def mesh_axes(mesh: MeshArg) -> Optional[tuple]:
+    """Normalise a mesh argument to ``((name, size), ...)`` — or None.
+
+    A mesh whose device product is 1 normalises to None: a single
+    device carries no mesh signature, so its plans keep the plain
+    (un-suffixed) keys and a 1x1 test mesh shares them.
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, str):
+        axes = []
+        for part in mesh.split("."):
+            got = re.fullmatch(r"(.*?)(\d+)", part)
+            if got is None:
+                raise ValueError(
+                    f"bad mesh-signature component {part!r} in {mesh!r} "
+                    f"(expected '<axis><size>', e.g. 'data4')")
+            axes.append((got.group(1), int(got.group(2))))
+        axes = tuple(axes)
+    elif hasattr(mesh, "shape") and hasattr(mesh.shape, "items"):
+        axes = tuple((str(n), int(s)) for n, s in mesh.shape.items())
+    else:
+        axes = tuple((str(n), int(s)) for n, s in mesh)
+    for name, _ in axes:
+        # 'stage1' + size 2 would render 'stage12' == ('stage', 12):
+        # two meshes colliding on one plan key.  The grammar stays
+        # unambiguous by construction instead of growing a separator.
+        if not name or name[-1].isdigit():
+            raise ValueError(
+                f"mesh axis name {name!r} would make the mesh "
+                f"signature ambiguous (names must not end in a "
+                f"digit); rename the axis")
+    if math.prod(s for _, s in axes) <= 1:
+        return None
+    return axes
+
+
+def mesh_signature(mesh: MeshArg) -> str:
+    """Mesh signature string: axis names + sizes in mesh order, joined
+    with '.', e.g. ``"data4.model2"`` — ``""`` for a single device.
+    The signature is the plan key's mesh component (see ``plan_key``),
+    so two runs on identically-shaped meshes share tuned plans while a
+    re-sharded run tunes afresh."""
+    axes = mesh_axes(mesh)
+    if axes is None:
+        return ""
+    return ".".join(f"{n}{s}" for n, s in axes)
+
+
+def _mesh_tag(mesh: MeshArg) -> str:
+    sig = mesh_signature(mesh)
+    return f"|mesh:{sig}" if sig else ""
+
+
+def mesh_device_count(mesh: MeshArg) -> int:
+    axes = mesh_axes(mesh)
+    return 1 if axes is None else math.prod(s for _, s in axes)
+
 
 def _engine_methods(engine: Engine) -> Optional[tuple]:
     if engine is None:
@@ -112,16 +188,22 @@ def _engine_tag(engine: Engine) -> str:
 
 
 def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
-             engine: Engine = None) -> str:
-    """Registry key: op|n-bucket|dtype|backend[|engine] (a flat string so
-    the registry JSON-serialises as a plain object).  The engine suffix
-    appears only for engine-restricted tunes (e.g. the tc_reduce /
-    mma_reduce 'auto' spellings), so a per-engine geometry plan never
-    collides with the unrestricted cross-engine winner."""
+             engine: Engine = None, mesh: MeshArg = None) -> str:
+    """Registry key: op|n-bucket|dtype|backend[|engine][|mesh:sig] (a
+    flat string so the registry JSON-serialises as a plain object).
+
+    The engine suffix appears only for engine-restricted tunes (e.g.
+    the tc_reduce / mma_reduce 'auto' spellings), so a per-engine
+    geometry plan never collides with the unrestricted cross-engine
+    winner.  The mesh suffix (``|mesh:data4.model2`` — see
+    ``mesh_signature``) appears only under a live >1-device mesh: a
+    mesh-keyed plan describes the *local per-device* chain geometry of
+    a size-n global problem, so it never collides with the
+    single-device plan for the same n."""
     if backend is None:
         backend = jax.default_backend()
     return (f"{op}|{bucket_n(n)}|{jax.numpy.dtype(dtype).name}|{backend}"
-            f"{_engine_tag(engine)}")
+            f"{_engine_tag(engine)}{_mesh_tag(mesh)}")
 
 
 # VMEM feasibility for Pallas tiles: input tile + f32 working copy,
@@ -267,36 +349,125 @@ def model_cost(plan: ReductionPlan, n: int, dtype,
 # does not carry it; 128 segments = one MXU lane tile).
 _MEASURE_SEGMENTS = 128
 
+# Cross-mesh combine model: one f32-scalar psum per mesh axis, tree
+# depth log2(axis size), in the same arbitrary PRAM-step units as the
+# local terms.  Which axes are the slow DCI hops comes from the
+# combine layer itself (``repro.distributed.collectives.SLOW_AXES``);
+# every other axis rides the fast ICI.
+_PSUM_STEP_FAST = 24.0
+_PSUM_STEP_SLOW = 512.0
+
+
+def combine_model_cost(mesh: MeshArg) -> float:
+    """Model cost of the cross-device scalar tree combine — constant
+    across candidates (it ranks nothing within one sweep) but part of
+    the honest total a mesh-keyed plan records in ``cost``."""
+    from repro.distributed.collectives import SLOW_AXES
+    axes = mesh_axes(mesh)
+    if axes is None:
+        return 0.0
+    total = 0.0
+    for name, size in axes:
+        if size <= 1:
+            continue
+        step = _PSUM_STEP_SLOW if name in SLOW_AXES \
+            else _PSUM_STEP_FAST
+        total += step * math.log2(size)
+    return total
+
+
+def _measure_problem(op: str, n: int, dtype, seed: int):
+    """The op-representative timed problem (input + op kwargs)."""
+    import numpy as np
+    from repro.core import dispatch
+    spec = dispatch.op_spec(op)
+    rng = np.random.default_rng(seed)
+    if spec.measure is not None:
+        return spec.measure(n, dtype, rng)
+    x = jax.numpy.asarray(
+        rng.standard_normal(n).astype(np.float32)).astype(dtype)
+    kwargs = {}
+    if spec.family == "segment":
+        kwargs = {
+            "segment_ids": jax.numpy.asarray(
+                rng.integers(0, _MEASURE_SEGMENTS, n)
+                .astype(np.int32)),
+            "num_segments": _MEASURE_SEGMENTS,
+        }
+    return x, kwargs
+
+
+def _sharded_executor(plan: ReductionPlan, op: str, axes: tuple, x,
+                      kwargs: dict):
+    """The timed callable for a mesh-keyed measured sweep.
+
+    Builds a live mesh matching ``axes`` (raising when this host cannot
+    — measuring a mesh plan on absent hardware would time the wrong
+    thing, exactly like measuring for a foreign backend), shards every
+    same-leading-dim array operand over all mesh axes, and runs
+    per-device ``execute_plan`` + the hierarchical scalar combine under
+    ``shard_map`` — the same local-partial/tree-combine structure
+    ``repro.distributed.tc_collectives`` executes in production.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.distributed import collectives as coll
+    names = tuple(a for a, _ in axes)
+    sizes = tuple(s for _, s in axes)
+    need = math.prod(sizes)
+    if need > len(jax.devices()):
+        raise ValueError(
+            f"cannot measure mesh {mesh_signature(axes)!r} plans on a "
+            f"{len(jax.devices())}-device host; use the analytical "
+            f"model (measure=False) or tune on the target mesh")
+    if x.shape[0] % need:
+        raise ValueError(
+            f"measured-sweep problem of leading dim {x.shape[0]} does "
+            f"not shard over {need} devices")
+    hw_mesh = compat.make_mesh(sizes, names)
+    lead = x.shape[0]
+    arr_keys = tuple(
+        k for k, v in kwargs.items()
+        if hasattr(v, "ndim") and v.ndim >= 1 and v.shape[0] == lead)
+    static = {k: v for k, v in kwargs.items() if k not in arr_keys}
+
+    def spec_of(v):
+        return P(names, *([None] * (v.ndim - 1)))
+
+    def body(xl, *arrs):
+        kw = dict(static, **dict(zip(arr_keys, arrs)))
+        partial = execute_plan(xl, plan, op=op, **kw)
+        return coll.mesh_psum(partial, names)
+
+    f = compat.shard_map(
+        body, mesh=hw_mesh,
+        in_specs=(spec_of(x),) + tuple(spec_of(kwargs[k])
+                                       for k in arr_keys),
+        out_specs=P())
+    extras = tuple(kwargs[k] for k in arr_keys)
+    return lambda v: f(v, *extras)
+
 
 def measure_cost(plan: ReductionPlan, n: int, dtype, *, iters: int = 5,
                  warmup: int = 2, seed: int = 0,
-                 op: str = "reduce_sum") -> float:
+                 op: str = "reduce_sum", mesh: MeshArg = None) -> float:
     """Wall-clock microseconds for one plan on this host's backend.
 
     The timed problem comes from the op's registry entry: an op with a
     ``measure`` hook builds its own representative input (masked_mean's
     mask, expert_counts' one-hot matrix); otherwise the family default
     is a size-n 1D stream (plus random segment ids for the segment
-    family).
+    family).  With ``mesh`` the size-n problem is *global*: it is
+    sharded over a live mesh of that shape and the timed region is the
+    per-device local execute plus the hierarchical scalar combine
+    under ``shard_map``.
     """
-    import numpy as np
-    from repro.core import dispatch
-    spec = dispatch.op_spec(op)
-    rng = np.random.default_rng(seed)
-    if spec.measure is not None:
-        x, kwargs = spec.measure(n, dtype, rng)
+    axes = mesh_axes(mesh)
+    x, kwargs = _measure_problem(op, n, dtype, seed)
+    if axes is None:
+        fn = lambda v: execute_plan(v, plan, op=op, **kwargs)
     else:
-        x = jax.numpy.asarray(
-            rng.standard_normal(n).astype(np.float32)).astype(dtype)
-        kwargs = {}
-        if spec.family == "segment":
-            kwargs = {
-                "segment_ids": jax.numpy.asarray(
-                    rng.integers(0, _MEASURE_SEGMENTS, n)
-                    .astype(np.int32)),
-                "num_segments": _MEASURE_SEGMENTS,
-            }
-    fn = lambda v: execute_plan(v, plan, op=op, **kwargs)
+        fn = _sharded_executor(plan, op, axes, x, kwargs)
     out = None
     for _ in range(warmup):
         out = fn(x)
@@ -401,7 +572,8 @@ def reset_default_registry() -> None:
 
 def autotune(n: int, dtype, *, op: str = "reduce_sum",
              measure: bool = False, chains=CHAINS, blocks=BLOCK_ROWS,
-             m: int = DEFAULT_M, engine: Engine = None) -> ReductionPlan:
+             m: int = DEFAULT_M, engine: Engine = None,
+             mesh: MeshArg = None) -> ReductionPlan:
     """Sweep the candidate space for one problem and return the winner.
 
     ``measure=False`` (default, and the only mode that is deterministic
@@ -409,16 +581,37 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
     times each candidate on the live backend.  ``engine`` restricts the
     sweep (per-engine geometry tuning).  The sweep is bucketed — score
     at the bucket size so every n in the octave gets the same plan.
+
+    With ``mesh`` the sweep tunes the **local per-device chain
+    geometry** of a size-n *global* problem: candidates are enumerated
+    and model-scored at the per-device shard size n / device-count
+    (plus the constant cross-mesh combine term), or wall-clock timed
+    under ``shard_map`` over a live mesh of that shape — so a 1-device
+    and a sharded run of the same global n resolve different R /
+    block_rows.  Inside a ``shard_map`` body every engine is structurally
+    legal (the shard is local), so the mesh sweep is *not* restricted to
+    the distribution-safe engines the way the pjit auto path is.
     """
+    axes = mesh_axes(mesh)
     nb = bucket_n(n)
+    # Local per-device shard of the bucketed global problem.  The
+    # measured size is the bucket rounded UP to a device-count
+    # multiple, so non-power-of-two meshes (data=3, ...) shard evenly
+    # and the timed shard matches the enumerated geometry.
+    need = 1 if axes is None else math.prod(s for _, s in axes)
+    local = max(math.ceil(nb / need), 1)
+    local_nb = nb if axes is None else bucket_n(local)
+    measure_nb = nb if axes is None else local * need
+    combine = combine_model_cost(axes)
     best: Optional[ReductionPlan] = None
-    for cand in candidate_plans(nb, dtype, chains=chains, blocks=blocks,
-                                m=m, engine=engine, op=op):
+    for cand in candidate_plans(local_nb, dtype, chains=chains,
+                                blocks=blocks, m=m, engine=engine, op=op):
         if measure:
-            cost = measure_cost(cand, nb, dtype, op=op)
+            cost = measure_cost(cand, measure_nb, dtype, op=op,
+                                mesh=axes)
             cand = dataclasses.replace(cand, source="measured", cost=cost)
         else:
-            cost = model_cost(cand, nb, dtype, op=op)
+            cost = model_cost(cand, local_nb, dtype, op=op) + combine
             cand = dataclasses.replace(cand, source="model", cost=cost)
         if best is None or cand.cost < best.cost:
             best = cand
@@ -430,18 +623,24 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
 def get_plan(n: int, dtype, *, op: str = "reduce_sum",
              backend: Optional[str] = None,
              registry: Optional[PlanRegistry] = None,
-             measure: bool = False, engine: Engine = None) -> ReductionPlan:
+             measure: bool = False, engine: Engine = None,
+             mesh: MeshArg = None) -> ReductionPlan:
     """Cached plan lookup — the entry point of ``method='auto'``.
 
     Registry hit: return it (a model-mode entry is re-tuned and
     replaced when ``measure=True`` asks for wall-clock evidence).
     Miss: run ``autotune`` once for the (op, n-bucket, dtype, backend
-    [, engine]) key and cache the winner.  Measuring for a backend
-    other than the live one is refused rather than silently timed on
-    the wrong hardware.
+    [, engine][, mesh]) key and cache the winner.  ``mesh`` keys (and
+    tunes) the plan for the local shard of a size-n global problem
+    under that mesh shape — the mesh-collective path
+    (``repro.distributed.tc_collectives``) and the auto path under a
+    live mesh both resolve here, so a sharded run never silently
+    reuses the single-device geometry.  Measuring for a backend other
+    than the live one is refused rather than silently timed on the
+    wrong hardware.
     """
     reg = registry if registry is not None else default_registry()
-    key = plan_key(op, n, dtype, backend, engine)
+    key = plan_key(op, n, dtype, backend, engine, mesh)
     plan = reg.get(key)
     if plan is not None and not (measure and plan.source != "measured"):
         return plan
@@ -451,6 +650,7 @@ def get_plan(n: int, dtype, *, op: str = "reduce_sum",
             f"cannot measure for backend {backend!r} on a "
             f"{jax.default_backend()!r} host; use the analytical model "
             f"(measure=False) or tune on the target hardware")
-    plan = autotune(n, dtype, op=op, measure=measure, engine=engine)
+    plan = autotune(n, dtype, op=op, measure=measure, engine=engine,
+                    mesh=mesh)
     reg.put(key, plan)
     return plan

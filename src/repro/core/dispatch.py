@@ -62,6 +62,9 @@ class DispatchContext:
     multi_device: bool
     axis: Optional[tuple] = None    # reduce family: reduced-axis subset
     scan_axis: Optional[int] = None  # scan family: the scanned axis
+    mesh_axes: Optional[tuple] = None  # ((name, size), ...) of the live
+    #                                    multi-device mesh, mesh order;
+    #                                    None on a single device
 
     @property
     def ndim(self) -> int:
@@ -83,10 +86,19 @@ class DispatchContext:
                 and all(d == 1 for d in self.shape[:-1]))
 
 
-def _multi_device() -> bool:
+def _live_mesh_axes() -> Optional[tuple]:
+    """((name, size), ...) of the ambient >1-device mesh, or None.
+
+    The mesh comes from the sharding context
+    (``repro.distributed.sharding.current_mesh``); a mesh whose device
+    product is 1 is indistinguishable from no mesh for dispatch
+    purposes (every engine is legal, plans carry no mesh signature)."""
     from repro.distributed import sharding as shd
     mesh = shd.current_mesh()
-    return mesh is not None and math.prod(mesh.devices.shape) > 1
+    if mesh is None or math.prod(mesh.devices.shape) <= 1:
+        return None
+    return tuple((str(name), int(size))
+                 for name, size in mesh.shape.items())
 
 
 # -------------------------------------------------------------- engines
@@ -204,18 +216,64 @@ def op_spec(name: str) -> OpSpec:
 
 
 def build_context(op: str, x, *, axis=None, scan_axis=None,
-                  multi_device: Optional[bool] = None) -> DispatchContext:
+                  multi_device: Optional[bool] = None,
+                  mesh_axes: Optional[tuple] = None) -> DispatchContext:
     if multi_device is None:
-        multi_device = _multi_device()
+        if mesh_axes is None:
+            mesh_axes = _live_mesh_axes()
+        multi_device = mesh_axes is not None
     return DispatchContext(
         op=op, shape=tuple(x.shape), dtype=jnp.dtype(x.dtype).name,
-        multi_device=multi_device, axis=axis, scan_axis=scan_axis)
+        multi_device=multi_device, axis=axis, scan_axis=scan_axis,
+        mesh_axes=mesh_axes)
 
 
 def legal_engines(spec: OpSpec, ctx: DispatchContext) -> tuple:
     """Engine names (registration order) whose capabilities cover ctx."""
     return tuple(e.name for e in spec.engines
                  if capability_reason(e, ctx) is None)
+
+
+def _unknown_method(spec: OpSpec, method: str) -> ValueError:
+    accepted = spec.engine_names() + tuple(spec.aliases or ())
+    return ValueError(
+        f"unknown {spec.name} method: {method!r} (accepted: 'auto', "
+        + ", ".join(repr(a) for a in sorted(accepted)) + ")")
+
+
+def known_method(op: str, method: str) -> bool:
+    """Does ``method`` spell an engine (or alias, or ``'auto'``) the op
+    declares — regardless of capability?  Unknown spellings must raise
+    at every API surface; only *capability* rejections may resolve
+    through a fallback policy (``resolve_method``)."""
+    return method == "auto" or op_spec(op).engine(method) is not None
+
+
+def local_plan(op: str, n: int, dtype, method: str = "auto", *,
+               mesh=None, chain: int = 4):
+    """Resolve a method spelling to an executable plan for a size-n
+    problem WITHOUT running it — how the mesh-collective layer
+    (``repro.distributed.tc_collectives``) picks the per-device
+    partial engine before entering ``shard_map``.
+
+    ``'auto'`` consults the plan registry (mesh-keyed when ``mesh`` is
+    given — the plan is tuned for the local shard of the size-n global
+    problem); an explicit spelling resolves through the op's aliases to
+    a one-engine plan with the hooks' default ``chain`` geometry;
+    an engine the op does not declare raises exactly like
+    ``dispatch``.  Capability checking happens at execution
+    (``execute`` validates structurally) — inside a ``shard_map`` body
+    the shard is local, so the environment predicate deliberately does
+    not apply.
+    """
+    from repro.core import autotune
+    spec = op_spec(op)
+    if method == "auto":
+        return autotune.get_plan(n, dtype, op=op, mesh=mesh)
+    eng = spec.engine(method)
+    if eng is None:
+        raise _unknown_method(spec, method)
+    return autotune.ReductionPlan(method=eng.name, chain=chain)
 
 
 def supported_method(op: str, x, method: str, **op_kwargs) -> bool:
@@ -286,21 +344,20 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
                              f"input: shape={ctx.shape}")
         restrict = None if legal == spec.engine_names() else legal
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
-                                 x.dtype, op=op, engine=restrict)
+                                 x.dtype, op=op, engine=restrict,
+                                 mesh=ctx.mesh_axes)
         return execute(op, x, plan, **op_kwargs)
     eng = spec.engine(method)
     if eng is None:
-        accepted = spec.engine_names() + tuple(spec.aliases or ())
-        raise ValueError(
-            f"unknown {op} method: {method!r} (accepted: 'auto', "
-            + ", ".join(repr(a) for a in sorted(accepted)) + ")")
+        raise _unknown_method(spec, method)
     reason = capability_reason(eng, ctx)
     if reason is not None:
         raise ValueError(
             f"engine {eng.name!r} cannot run op {op!r} here: {reason}")
     if chain == "auto":
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
-                                 x.dtype, op=op, engine=(eng.name,))
+                                 x.dtype, op=op, engine=(eng.name,),
+                                 mesh=ctx.mesh_axes)
         return execute(op, x, plan, **op_kwargs)
     overrides = {} if chain is None else {"chain": int(chain)}
     plan = autotune.ReductionPlan(method=eng.name, **overrides)

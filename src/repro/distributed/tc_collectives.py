@@ -1,0 +1,214 @@
+"""Mesh-aware chained-MMA collectives: the paper's design scaled past
+the device boundary.
+
+The paper's chain-of-R-MMAs reduction keeps **one 32-bit partial per
+block** until a final combine.  A hierarchical all-reduce has exactly
+that shape one level up: each *device* runs the chained-MMA engines
+over its local shard, emits a single f32 scalar partial (the paper's
+precision contract — partials are f32 accumulators and never
+round-trip through the input dtype), and a fast-before-slow psum tree
+(``repro.distributed.collectives.hierarchical_psum`` /
+``repro.distributed.collectives.mesh_psum``) folds the per-device
+scalars across the mesh — the same local-reduce-then-combine structure
+Dakkak et al. use for multi-TCU reductions.
+
+Entry points (all jit-safe, all composable with pjit-sharded inputs —
+``shard_map`` re-shards as needed):
+
+``tc_psum``        global sum (or any registered reduce-family op) of
+                   one array across every element and every device →
+                   a replicated f32 scalar.
+``tc_all_reduce``  leaf-wise ``tc_psum`` over a pytree.
+``tc_global_norm`` pytree L2 norm: per-leaf ``squared_sum`` partials,
+                   scalar tree combine, one sqrt — the mesh-aware form
+                   of ``repro.core.integration.global_norm`` used by
+                   gradient clipping and the trainer's param-norm
+                   metric.
+
+Plans are **mesh-keyed**: the per-device partial executes under a
+``repro.core.autotune.ReductionPlan`` resolved with the mesh signature
+in the key (``repro.core.autotune.plan_key`` — see
+``docs/distributed.md``), tuned for the *local shard* of the global
+problem.  Inside the ``shard_map`` body the shard is an ordinary local
+array, so every engine — including the flatten-and-pad chained core
+and the Pallas kernel that the pjit auto path must reject under a live
+mesh — is structurally legal as the local-partial engine.
+
+Every entry point takes ``via``: ``'shard_map'`` (default) is the
+explicit collective above; ``'gspmd'`` expresses the same reduction
+globally so the partitioner schedules it in place — the mode for call
+sites inside a pjit-traced step, where a shard_map in_spec would
+constrain operand layouts (see ``tc_psum``).
+
+Single-device fallback: with no mesh (or a 1-device mesh) every entry
+point degrades to the plain dispatch path — bit-exact with the
+non-collective hooks, no shard_map in the trace.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import autotune, dispatch
+from repro.distributed import sharding as shd
+from repro.distributed.collectives import mesh_psum
+
+# Ops whose per-device partial is a single f32 scalar — the collective
+# contract.  (Row-wise / scan-family ops keep per-position outputs, so
+# the one-scalar-per-device combine does not apply to them.)
+_SCALAR_OPS = ("reduce_sum", "squared_sum")
+
+
+def _ambient_mesh(mesh):
+    return mesh if mesh is not None else shd.current_mesh()
+
+
+def shardable_axes(mesh, dim: int) -> tuple:
+    """Mesh axis names (mesh order, greedy) over which a leading
+    dimension of ``dim`` splits evenly — the axes the collective
+    shards *and* combines over.  Axes left out stay replicated inside
+    the ``shard_map`` body and are deliberately not psum'd (they would
+    multiply the sum by their size)."""
+    if mesh is None:
+        return ()
+    chosen = []
+    rem = int(dim)
+    for name, size in mesh.shape.items():
+        if size > 1 and rem % size == 0:
+            chosen.append(str(name))
+            rem //= size
+    return tuple(chosen)
+
+
+def _local_reduce(op: str, x, method: str, mesh=None):
+    """The GSPMD / no-collective path: plain dispatch, with the
+    stay-trainable resolve policy for engines this call cannot serve
+    (an un-shardable leaf under a live mesh still sees the strict pjit
+    predicates).  Unknown spellings are NOT resolved — dispatch raises
+    its canonical error for them; only capability rejections map to
+    the fallback.  An explicitly-given mesh is installed as the
+    sharding context (replacing any different ambient one, like the
+    shard_map path honours its mesh argument), so the auto plan keys
+    against the mesh actually asked for."""
+    if mesh is not None and shd.current_mesh() is not mesh:
+        with shd.axis_rules(mesh):
+            return _local_reduce(op, x, method)
+    if dispatch.known_method(op, method):
+        method = dispatch.resolve_method(op, x, method, fallback="mma")
+    # chain=4 matches the hooks' explicit-engine default AND the
+    # shard_map path's local_plan, so the fallback is bit-exact with
+    # both (the auto path ignores chain; its plan geometry wins).
+    return dispatch.dispatch(op, x, method=method, chain=4)
+
+
+def tc_psum(x, *, mesh=None, method: str = "auto",
+            op: str = "reduce_sum",
+            via: str = "shard_map") -> jax.Array:
+    """Global reduction of every element of ``x`` across the mesh —
+    one replicated f32 scalar.
+
+    ``via`` picks who schedules the hierarchy:
+
+    * ``'shard_map'`` (default) — the explicit collective.  Per-device,
+      the chained-MMA engines reduce the local shard under the
+      mesh-keyed plan (``repro.core.dispatch.execute`` — the single
+      executor), emitting exactly one f32 scalar; cross-device, the
+      scalars fold through the fast/slow-axis psum tree
+      (``repro.distributed.collectives.mesh_psum``).  The right mode
+      for concrete sharded arrays and manual-schedule regions — but
+      its in_spec *constrains the operand's layout*, so inside an
+      auto-sharded jit whose tensors have other consumers it can force
+      re-layouts (XLA's "involuntary full rematerialization").
+    * ``'gspmd'`` — the partitioner owns the layout: the reduction is
+      expressed globally through dispatch (distribution-safe engines,
+      auto plans still mesh-keyed via ``DispatchContext.mesh_axes``)
+      and GSPMD inserts the scalar psums in place.  The right mode
+      for call sites *inside* a pjit-traced step (gradient clipping,
+      the param-norm metric).
+
+    ``op`` selects any scalar reduce-family op (``reduce_sum`` or
+    ``squared_sum``); ``mesh`` defaults to the ambient
+    sharding-context mesh.
+
+    Falls back to the plain dispatch path — exact, no shard_map —
+    when there is no >1-device mesh, the input is 0-d, or its leading
+    dimension shards over no mesh axis (pjit's global semantics make
+    that path correct too; it just skips the explicit hierarchy).
+    """
+    if op not in _SCALAR_OPS:
+        raise ValueError(
+            f"tc_psum serves the scalar reduce ops {_SCALAR_OPS}, "
+            f"not {op!r} (its per-device partial must be one f32 "
+            f"scalar)")
+    if via not in ("shard_map", "gspmd"):
+        raise ValueError(f"unknown via: {via!r} "
+                         f"(accepted: 'shard_map', 'gspmd')")
+    mesh = _ambient_mesh(mesh)
+    if via == "gspmd":
+        return _local_reduce(op, x, method, mesh)
+    if autotune.mesh_device_count(mesh) <= 1 or x.ndim == 0 \
+            or x.size == 0:
+        return _local_reduce(op, x, method)
+    names = shardable_axes(mesh, x.shape[0])
+    if not names:
+        return _local_reduce(op, x, method)
+    # Key (and tune) the plan by the axes actually sharded over — a
+    # leaf that splits over data but not model holds an n/4 shard on a
+    # 4x2 mesh, not n/8, and must not share the full-mesh plan entry.
+    sub_mesh = tuple((a, int(mesh.shape[a])) for a in names)
+    plan = dispatch.local_plan(op, x.size, x.dtype, method,
+                               mesh=sub_mesh)
+    spec = P(names, *([None] * (x.ndim - 1)))
+
+    def body(xl):
+        partial = dispatch.execute(op, xl, plan)
+        return mesh_psum(partial.astype(jnp.float32), names)
+
+    return compat.shard_map(body, mesh=mesh, in_specs=(spec,),
+                            out_specs=P(), check_vma=False)(x)
+
+
+def tc_all_reduce(tree, *, mesh=None, method: str = "auto",
+                  op: str = "reduce_sum", via: str = "shard_map"):
+    """Leaf-wise ``tc_psum`` over a pytree: every leaf becomes one
+    replicated f32 scalar (its global sum, or global sum of squares
+    with ``op='squared_sum'``), each under its own mesh-keyed plan —
+    big embedding tables and small biases tune separately, exactly
+    like the per-leaf plans of ``repro.core.integration.global_norm``.
+    """
+    mesh = _ambient_mesh(mesh)
+    return jax.tree_util.tree_map(
+        lambda leaf: tc_psum(leaf, mesh=mesh, method=method, op=op,
+                             via=via),
+        tree)
+
+
+def tc_global_norm(tree, *, mesh=None, method: str = "auto",
+                   via: str = "shard_map") -> jax.Array:
+    """Global L2 norm of a pytree across the mesh — replicated f32.
+
+    sqrt of the sum of per-leaf ``tc_psum(op='squared_sum')`` results:
+    each device contributes one f32 squared-sum partial per leaf
+    (computed by the chained-MMA engines over its local shard), the
+    hierarchical psum tree folds the partials, and the leaf scalars
+    are summed in f32 before the single sqrt.  The mesh-aware form of
+    ``repro.core.integration.global_norm`` — identical on one device —
+    used by ``repro.optim.adamw.clip_by_global_norm`` and the
+    trainer's ``param_norm`` metric (both with ``via='gspmd'``: their
+    trees live inside the pjit-traced train step, where a shard_map
+    in_spec would constrain every leaf's layout — see ``tc_psum``).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    mesh = _ambient_mesh(mesh)
+    total = functools.reduce(jnp.add, [
+        tc_psum(leaf, mesh=mesh, method=method, op="squared_sum",
+                via=via)
+        for leaf in leaves])
+    return jnp.sqrt(total)

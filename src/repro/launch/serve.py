@@ -4,6 +4,13 @@
 (the production pattern: a fleet of fixed-shape servers + a router).
 Greedy or temperature sampling; per-slot stop handling so a batch of
 heterogeneous requests drains correctly (continuous-batching-lite).
+
+Scoring (``Server.score`` / ``batched_logprobs``) normalises the
+batched logits through the TC reduction path: the log-softmax
+normaliser's sum over vocab and the per-sequence fold both ride
+``repro.core.integration.reduce_sum`` (the batched ones-contraction on
+the matrix unit, mesh-keyed plans under a live mesh) instead of ad-hoc
+vector-lane sums.
 """
 
 from __future__ import annotations
@@ -17,8 +24,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import integration as ci
 from repro.distributed import sharding as shd
 from repro.models import model_zoo
+
+
+def batched_logprobs(logits, tokens, *, method: str = "auto") -> jax.Array:
+    """Per-token log-probabilities: (B, S, V) logits + (B, S) ids →
+    (B, S) f32.
+
+    The log-softmax normaliser logZ = log Σ_v exp(l_v − m) + m is the
+    serving stack's per-position arithmetic reduction; its sum over
+    vocab routes through the TC dispatch layer
+    (``repro.core.integration.reduce_sum`` with ``axis=-1`` — the
+    batched ones-contraction, reshape-free, so sharded logits keep
+    their layout and ``method='auto'`` resolves a mesh-keyed plan
+    under a live mesh).  Accumulation is f32 throughout (the precision
+    contract); the max-shift keeps exp in range.
+    """
+    lf = logits.astype(jnp.float32)
+    shift = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    z = ci.reduce_sum(jnp.exp(lf - shift), axis=-1, method=method)
+    logz = jnp.log(z) + shift[..., 0]
+    tok = jnp.take_along_axis(
+        lf, tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return tok - logz
 
 
 @dataclasses.dataclass
@@ -38,8 +68,37 @@ class Server:
             with shd.axis_rules(self.mesh):
                 return m.decode_step(params, batch)
 
+        def full_logits(params, batch):
+            with shd.axis_rules(self.mesh):
+                return m.logits(params, batch)
+
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode, donate_argnums=())
+        self._logits = jax.jit(full_logits)
+
+    def score(self, params, tokens, *, mask=None,
+              extras: Optional[dict] = None,
+              method: str = "auto") -> jax.Array:
+        """Total log-probability of each sequence under the model
+        (teacher forcing): one full-sequence forward (the model's
+        ``logits`` path — ``prefill`` keeps only the last position),
+        ``batched_logprobs`` normalisation over vocab, then a per-row
+        fold of the token logprobs — both reductions on the
+        registry-dispatched TC path.  ``mask`` (optional, (B, S) with
+        1 = scored position) zeroes padding before the fold; ``extras``
+        carries the modality inputs enc-dec / vision configs require
+        (``src_embeds`` / ``vision_embeds``), exactly like
+        ``generate``.  Returns (B,) f32.
+        """
+        toks = jnp.asarray(tokens, jnp.int32)
+        batch = {"tokens": toks}
+        if extras:
+            batch.update(extras)
+        logits = self._logits(params, batch)
+        lp = batched_logprobs(logits[:, :-1], toks[:, 1:], method=method)
+        if mask is not None:
+            lp = lp * jnp.asarray(mask, jnp.float32)[:, 1:]
+        return ci.reduce_sum(lp, axis=-1, method=method)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:

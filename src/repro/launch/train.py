@@ -20,9 +20,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, TrainConfig
-from repro.core import integration as ci
 from repro.data.pipeline import SyntheticLMData
 from repro.distributed import sharding as shd
+from repro.distributed import tc_collectives
 from repro.distributed.fault_tolerance import TrainSupervisor
 from repro.models import model_zoo
 from repro.models.param import axes_tree
@@ -119,17 +119,14 @@ def make_train_step(model, tconf: TrainConfig, mesh=None):
                 weight_decay=tconf.weight_decay,
                 grad_clip=tconf.grad_clip,
                 reduce_method=cfg.reduce_method)
-            # Post-step parameter norm on the same registry-dispatched
-            # reduction path as the grad norm (per-leaf tuned plans
-            # under method='auto'; one <x, x> contraction per leaf).
-            # Ablation engines the per-leaf reduction cannot serve
-            # under this mesh resolve to the safe contraction.
-            from repro.core import dispatch
-            pn_method = dispatch.resolve_method(
-                "squared_sum",
-                jax.tree_util.tree_leaves(new_params)[0],
-                cfg.reduce_method, fallback="mma")
-            pnorm = ci.global_norm(new_params, method=pn_method)
+            # Post-step parameter norm on the same mesh-aware
+            # collective as the grad norm (via='gspmd': the param tree
+            # is pjit-owned here, so the partitioner schedules the
+            # per-leaf squared-sum partials + scalar psums in place;
+            # mesh-keyed per-leaf plans under method='auto').
+            pnorm = tc_collectives.tc_global_norm(
+                new_params, mesh=mesh, method=cfg.reduce_method,
+                via="gspmd")
         metrics = dict(metrics, **om, lr=lr, loss=loss,
                        param_norm=pnorm)
         return TrainState(new_params, new_opt, state.step + 1), metrics

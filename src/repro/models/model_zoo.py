@@ -30,6 +30,7 @@ class Model:
     specs: Any
     init: Callable
     loss: Callable          # (params, batch) -> (loss, metrics)
+    logits: Callable        # (params, batch) -> (B, S, V) full-seq logits
     prefill: Callable       # (params, batch) -> (logits, caches)
     decode_step: Callable   # (params, batch) -> (logits, caches)
     input_specs: Callable   # (shape_cfg) -> batch pytree of SDS
@@ -128,6 +129,16 @@ def build(cfg) -> Model:
         metrics["loss"] = total
         return total, metrics
 
+    def logits_fn(params, batch):
+        """Full-sequence teacher-forcing logits (B, S, V) — the scoring
+        path (``repro.launch.serve.Server.score``).  Unlike ``prefill``
+        (which keeps only the last position for the decode loop), every
+        position's logits survive; no caches are allocated."""
+        memory = _memory(params, cfg, batch)
+        hidden, _, _ = T.decoder_forward(
+            params, cfg, batch["tokens"], memory=memory)
+        return T.logits_from_hidden(params, cfg, hidden)
+
     def _decode_capacity(shape_cfg):
         return shape_cfg.seq_len
 
@@ -185,5 +196,6 @@ def build(cfg) -> Model:
         return caches
 
     return Model(cfg=cfg, specs=specs, init=init, loss=loss,
-                 prefill=prefill, decode_step=decode_step,
-                 input_specs=input_specs, cache_specs=cache_specs)
+                 logits=logits_fn, prefill=prefill,
+                 decode_step=decode_step, input_specs=input_specs,
+                 cache_specs=cache_specs)

@@ -2,7 +2,10 @@
 
   * configurable moment dtype (bf16 moments = beyond-paper memory saving),
   * global-norm gradient clipping routed through the paper's MMA
-    reduction engine (core.integration.global_norm),
+    reduction engine as a mesh-aware collective
+    (repro.distributed.tc_collectives.tc_global_norm: per-device f32
+    chained-MMA partials + hierarchical psum tree under a live mesh,
+    plain core.integration.global_norm on one device),
   * ZeRO-style state sharding: moments inherit the parameters' logical
     axes, so under the FSDP rules they shard over 'data' automatically.
 """
@@ -14,8 +17,6 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-
-from repro.core import integration as ci
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,16 +46,19 @@ def state_axes(param_axes) -> AdamWState:
 
 def clip_by_global_norm(grads, max_norm: float, *, method: str = "mma"):
     """Returns (clipped grads, pre-clip norm). The norm is the paper's
-    MMA-encoded reduction.  Engines the per-leaf squared_sum cannot
-    serve here (the flatten-only ablation spellings under a live
-    multi-device mesh) resolve to the distribution-safe contraction —
-    training must survive every reduce_method ablation."""
-    from repro.core import dispatch
-    leaves = jax.tree_util.tree_leaves(grads)
-    if leaves:
-        method = dispatch.resolve_method("squared_sum", leaves[0],
-                                         method, fallback="mma")
-    norm = ci.global_norm(grads, method=method)
+    MMA-encoded reduction through the mesh-aware collective layer
+    (``repro.distributed.tc_collectives.tc_global_norm``) in its
+    ``via='gspmd'`` mode: the gradient tree lives inside the
+    pjit-traced step, so the partitioner owns every leaf's layout
+    (each leaf is one in-place <g, g> contraction + scalar psums; no
+    shard_map in_spec to force re-layouts) while auto plans stay
+    mesh-keyed.  Ablation engines a leaf cannot serve under the live
+    mesh resolve to the distribution-safe contraction — training must
+    survive every reduce_method spelling.  On a single device this is
+    exactly the plain ``repro.core.integration.global_norm``."""
+    from repro.distributed import tc_collectives
+    norm = tc_collectives.tc_global_norm(grads, method=method,
+                                         via="gspmd")
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
     return jax.tree_util.tree_map(
         lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),

@@ -1,0 +1,426 @@
+"""Mesh-aware chained-MMA collectives (repro.distributed.tc_collectives)
+and the mesh-keyed plan machinery behind them.
+
+Fast lane: single-device fallback exactness, the mesh-signature / plan-key
+grammar, local-geometry tuning, and registry JSON round-trips of
+mesh-keyed plans.  Slow lane: an 8-CPU-device subprocess (the dry-run
+contract keeps the main process single-device) asserting tc_psum /
+tc_global_norm match lax.psum-based oracles under jit + shard_map and
+that method='auto' resolves mesh-keyed plans distinct from the
+single-device keys."""
+
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core import integration as ci
+from repro.distributed import tc_collectives as tcc
+
+
+def _x(n, seed=0):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .normal(size=n).astype(np.float32))
+
+
+# ------------------------------------------------- single-device lane
+
+
+def test_single_device_fallback_is_exact():
+    """With no mesh every entry point is the plain dispatch path —
+    bit-identical to the non-collective hooks."""
+    x = _x(1_000)
+    assert float(tcc.tc_psum(x, method="vpu")) == \
+        float(jnp.sum(x.astype(jnp.float32)))
+    assert float(tcc.tc_psum(x, method="mma")) == \
+        float(ci.reduce_sum(x, method="mma"))
+    # chain-sensitive engines too: the fallback shares the hooks'
+    # chain=4 default, so the f32 accumulation grouping is identical
+    for m in ("mma_chained", "pallas"):
+        assert float(tcc.tc_psum(x, method=m)) == \
+            float(ci.reduce_sum(x, method=m)), m
+    tree = {"a": x.reshape(50, 20), "b": jnp.ones((37,)),
+            "c": jnp.float32(3.0)}
+    assert float(tcc.tc_global_norm(tree, method="mma")) == \
+        float(ci.global_norm(tree, method="mma"))
+
+
+def test_tc_psum_auto_matches_fsum(fresh_plan_registry):
+    x = _x(70_001, seed=3)
+    want = math.fsum(np.asarray(x, np.float64).tolist())
+    got = float(tcc.tc_psum(x, method="auto"))
+    assert abs(got - want) <= 1e-4 * max(abs(want), math.sqrt(x.size))
+    sq = float(tcc.tc_psum(x, method="auto", op="squared_sum"))
+    sq_want = float(np.sum(np.asarray(x, np.float64) ** 2))
+    assert abs(sq - sq_want) <= 1e-4 * sq_want
+
+
+def test_tc_all_reduce_leafwise(fresh_plan_registry):
+    tree = {"a": _x(512, 1), "b": _x(2_048, 2)}
+    out = tcc.tc_all_reduce(tree, method="auto")
+    for k in tree:
+        np.testing.assert_allclose(
+            float(out[k]), float(np.sum(np.asarray(tree[k], np.float64))),
+            rtol=1e-5, atol=1e-3)
+
+
+def test_tc_psum_rejects_non_scalar_ops():
+    with pytest.raises(ValueError, match="scalar reduce"):
+        tcc.tc_psum(_x(64), op="scan")
+    with pytest.raises(ValueError, match="accepted"):
+        tcc.tc_psum(_x(64), op="reduce_sum", method="nope")
+    with pytest.raises(ValueError, match="via"):
+        tcc.tc_psum(_x(64), via="nope")
+
+
+def test_gspmd_honours_explicit_mesh(fresh_plan_registry):
+    """via='gspmd' must key plans against the mesh actually asked for,
+    replacing any different ambient context — symmetric with the
+    shard_map path honouring its mesh argument."""
+    class FakeMesh:
+        shape = {"data": 2}
+        devices = np.empty((2,), dtype=object)
+
+    x = _x(4096)
+    got = tcc.tc_psum(x, via="gspmd", mesh=FakeMesh())
+    np.testing.assert_allclose(
+        float(got), float(np.sum(np.asarray(x, np.float64))),
+        rtol=1e-5, atol=1e-3)
+    keys = [k for k, _ in autotune.default_registry().items()]
+    assert any(k.endswith("|mesh:data2") for k in keys), keys
+
+
+def test_gspmd_mode_single_device_exact(fresh_plan_registry):
+    """via='gspmd' (the in-pjit mode) is the plain dispatch path on one
+    device — identical to the default mode's fallback."""
+    x = _x(1_000)
+    assert float(tcc.tc_psum(x, via="gspmd", method="vpu")) == \
+        float(jnp.sum(x.astype(jnp.float32)))
+    tree = {"a": x.reshape(50, 20), "b": jnp.ones((37,))}
+    assert float(tcc.tc_global_norm(tree, via="gspmd", method="mma")) \
+        == float(ci.global_norm(tree, method="mma"))
+
+
+def test_empty_tree_norm_is_zero():
+    assert float(tcc.tc_global_norm({})) == 0.0
+
+
+# -------------------------------------- mesh signature / key grammar
+
+
+def test_mesh_signature_grammar():
+    axes = (("data", 4), ("model", 2))
+    assert autotune.mesh_signature(axes) == "data4.model2"
+    # string signatures parse back to the same axes
+    assert autotune.mesh_axes("data4.model2") == axes
+    assert autotune.mesh_device_count(axes) == 8
+    # a 1x1 mesh carries no signature: its plans share the
+    # single-device keys
+    assert autotune.mesh_signature((("data", 1), ("model", 1))) == ""
+    assert autotune.mesh_axes(None) is None
+    with pytest.raises(ValueError):
+        autotune.mesh_axes("data")
+    # digit-ending axis names would collide ('stage1'+2 == 'stage'+12)
+    # — the grammar stays unambiguous by rejecting them
+    with pytest.raises(ValueError, match="ambiguous"):
+        autotune.mesh_signature((("stage1", 2),))
+
+
+def test_mesh_key_distinct_from_single_device():
+    plain = autotune.plan_key("reduce_sum", 2**20, jnp.float32)
+    meshed = autotune.plan_key("reduce_sum", 2**20, jnp.float32,
+                               mesh="data4.model2")
+    assert meshed == plain + "|mesh:data4.model2"
+    assert meshed != plain
+    # engine restriction and mesh compose
+    both = autotune.plan_key("reduce_sum", 2**20, jnp.float32,
+                             engine="pallas", mesh=(("data", 8),))
+    assert both.endswith("|pallas|mesh:data8")
+
+
+def test_shardable_axes_greedy_divisibility():
+    class FakeMesh:
+        shape = {"data": 4, "model": 3}
+    assert tcc.shardable_axes(FakeMesh(), 24) == ("data", "model")
+    assert tcc.shardable_axes(FakeMesh(), 8) == ("data",)
+    assert tcc.shardable_axes(FakeMesh(), 9) == ("model",)
+    assert tcc.shardable_axes(FakeMesh(), 7) == ()
+    assert tcc.shardable_axes(None, 8) == ()
+
+
+# ------------------------------------------------- mesh-keyed plans
+
+
+def test_mesh_plan_tunes_local_geometry():
+    """A mesh-keyed plan is the local per-device tune of the global
+    problem: same winning geometry as the n/D single-device sweep, with
+    the constant cross-mesh combine term added to its recorded cost."""
+    n, d = 2**22, 8
+    mesh = (("data", 4), ("model", 2))
+    p_mesh = autotune.autotune(n, jnp.float32, mesh=mesh)
+    p_local = autotune.autotune(n // d, jnp.float32)
+    assert (p_mesh.method, p_mesh.chain, p_mesh.block_rows) == \
+        (p_local.method, p_local.chain, p_local.block_rows)
+    np.testing.assert_allclose(
+        p_mesh.cost - p_local.cost,
+        autotune.combine_model_cost(mesh), rtol=1e-9)
+    # the combine model charges the DCI-linked pod axis more than ICI
+    assert autotune.combine_model_cost((("pod", 2),)) > \
+        autotune.combine_model_cost((("data", 2),))
+
+
+def test_non_pow2_mesh_tunes_cleanly():
+    """A mesh with an odd device product (data=3) still tunes: the
+    local shard is the bucket rounded up to a device multiple, so the
+    model sweep enumerates real shard geometry (and a measured sweep
+    would shard evenly)."""
+    plan = autotune.autotune(2**15, jnp.float32, mesh=(("data", 3),))
+    assert plan.method
+    assert autotune.mesh_signature((("data", 3),)) == "data3"
+
+
+def test_mesh_keyed_plans_round_trip_registry_json(fresh_plan_registry):
+    reg = fresh_plan_registry
+    mesh = (("data", 4), ("model", 2))
+    for n in (2**14, 2**20):
+        autotune.get_plan(n, jnp.float32, registry=reg, mesh=mesh)
+        autotune.get_plan(n, jnp.float32, registry=reg)
+    keys = [k for k, _ in reg.items()]
+    assert sum(k.endswith("|mesh:data4.model2") for k in keys) == 2
+    assert sum("mesh:" not in k for k in keys) == 2
+    back = autotune.PlanRegistry.from_json(reg.to_json())
+    assert back.items() == reg.items()
+    assert json.loads(reg.to_json())  # flat plain-object JSON
+    # a round-tripped mesh-keyed plan is executable as a local plan
+    key = next(k for k in keys if k.endswith("|mesh:data4.model2"))
+    got = float(autotune.execute_plan(jnp.ones((2**14,)), back.get(key)))
+    assert got == pytest.approx(float(2**14), rel=1e-5)
+
+
+def test_measure_refused_without_the_mesh_devices():
+    """Measuring a mesh-keyed plan on a host that cannot form the mesh
+    is refused (like measuring for a foreign backend) — never silently
+    timed on the wrong topology."""
+    if len(jax.devices()) >= 8:
+        pytest.skip("host actually has the devices")
+    with pytest.raises(ValueError, match="device"):
+        autotune.measure_cost(autotune.ReductionPlan(method="vpu"),
+                              2**13, jnp.float32,
+                              mesh=(("data", 4), ("model", 2)))
+
+
+# --------------------------------- serving logprob normalisation
+
+
+def test_batched_logprobs_matches_log_softmax(fresh_plan_registry):
+    from repro.launch.serve import batched_logprobs
+    rng = np.random.default_rng(5)
+    logits = jnp.asarray(rng.normal(size=(3, 7, 96))
+                         .astype(np.float32) * 4.0)
+    toks = jnp.asarray(rng.integers(0, 96, (3, 7)), jnp.int32)
+    for method in ("auto", "mma", "vpu"):
+        got = batched_logprobs(logits, toks, method=method)
+        want = jnp.take_along_axis(
+            jax.nn.log_softmax(logits, axis=-1),
+            toks[..., None], axis=-1)[..., 0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_server_score_end_to_end(fresh_plan_registry):
+    """Server.score runs the full-sequence logits path (prefill keeps
+    only the last position) and folds masked token logprobs on the TC
+    reduction path."""
+    from repro.configs import registry
+    from repro.launch.serve import Server, batched_logprobs
+    from repro.models import model_zoo
+    cfg = registry.get_config("gemma2-2b", smoke=True)
+    model = model_zoo.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model)
+    toks = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    mask = np.ones((2, 8), np.float32)
+    mask[1, 5:] = 0.0
+    got = srv.score(params, toks, mask=mask)
+    assert got.shape == (2,)
+    assert np.all(np.isfinite(np.asarray(got)))
+    # oracle from the same full-sequence logits
+    logits = model.logits(params, {"tokens": jnp.asarray(toks)})
+    lp = batched_logprobs(logits[:, :-1], jnp.asarray(toks)[:, 1:],
+                          method="vpu")
+    want = np.sum(np.asarray(lp) * mask[:, 1:], axis=-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_server_score_encdec_extras(fresh_plan_registry):
+    """Scoring an enc-dec config needs its modality inputs: score
+    forwards ``extras`` into the batch exactly like generate."""
+    from repro.configs import registry
+    from repro.launch.serve import Server
+    from repro.models import model_zoo
+    cfg = registry.get_config("seamless-m4t-large-v2", smoke=True)
+    model = model_zoo.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    extras = {"src_embeds": jnp.asarray(
+        rng.standard_normal((2, 6, cfg.d_model)), jnp.bfloat16)}
+    got = srv.score(params, toks, extras=extras)
+    assert got.shape == (2,)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+# ---------------------------------------------- multi-device (slow)
+
+
+_MESH_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.core import autotune, dispatch
+    from repro.distributed import sharding as shd
+    from repro.distributed import tc_collectives as tcc
+    from repro.distributed.collectives import (compressed_psum,
+                                               mesh_psum)
+
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4096,)).astype(np.float32))
+    out = {}
+
+    # lax.psum-based oracle under jit + shard_map
+    def psum_oracle(v):
+        def body(xl):
+            return jax.lax.psum(jax.lax.psum(
+                jnp.sum(xl.astype(jnp.float32)), "data"), "model")
+        return compat.shard_map(
+            body, mesh=mesh, in_specs=(P(("data", "model")),),
+            out_specs=P(), check_vma=False)(v)
+
+    out["psum_oracle"] = float(jax.jit(psum_oracle)(x))
+    out["tc_psum"] = float(jax.jit(
+        lambda v: tcc.tc_psum(v, mesh=mesh))(x))
+
+    tree = {"w": jnp.asarray(rng.normal(size=(64, 48))
+                             .astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(37,))
+                             .astype(np.float32)),
+            "s": jnp.float32(2.5)}
+    out["tc_norm"] = float(jax.jit(
+        lambda t: tcc.tc_global_norm(t, mesh=mesh))(tree))
+    out["norm_oracle"] = float(np.sqrt(sum(
+        np.sum(np.asarray(v, np.float64) ** 2)
+        for v in tree.values())))
+
+    # the auto path under the live mesh resolves mesh-keyed plans
+    with shd.axis_rules(mesh):
+        out["auto_under_mesh"] = float(jax.jit(
+            lambda v: dispatch.dispatch("reduce_sum", v,
+                                        method="auto"))(x))
+    keys = [k for k, _ in autotune.default_registry().items()]
+    out["mesh_keys"] = sorted(k for k in keys if "mesh:" in k)
+    out["single_key"] = autotune.plan_key("reduce_sum", x.size,
+                                          jnp.float32)
+    out["mesh_key"] = autotune.plan_key("reduce_sum", x.size,
+                                        jnp.float32, mesh=mesh)
+
+    # ablation engines are legal as the local-partial engine: the
+    # shard inside shard_map is an ordinary local array
+    out["tc_psum_pallas"] = float(
+        tcc.tc_psum(x, mesh=mesh, method="pallas"))
+    out["tc_psum_chained"] = float(
+        tcc.tc_psum(x, mesh=mesh, method="mma_chained"))
+
+    # via='gspmd' (the in-pjit mode the trainer uses): the partitioner
+    # schedules the per-leaf contractions; same value, mesh-keyed plans
+    with shd.axis_rules(mesh):
+        out["tc_norm_gspmd"] = float(jax.jit(
+            lambda t: tcc.tc_global_norm(t, via="gspmd"))(tree))
+
+    # partial sharding: dim0 divides data(4) but not model(2), so the
+    # collective shards and combines over data only — and keys the
+    # plan by that subset (an n/4 shard, not n/8)
+    x4 = jnp.asarray(rng.normal(size=(4, 33)).astype(np.float32))
+    out["partial"] = float(tcc.tc_psum(x4, mesh=mesh))
+    out["partial_want"] = float(np.sum(np.asarray(x4, np.float64)))
+    out["partial_keys"] = sorted(
+        k for k, _ in autotune.default_registry().items()
+        if k.endswith("|mesh:data4"))
+
+    # compressed_psum's dequant accumulation rides mesh_psum now:
+    # same fast/slow tree as a raw two-axis psum
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    def comp(v):
+        def body(vl):
+            red, _ = compressed_psum(vl, ("data", "model"),
+                                     jnp.zeros_like(vl))
+            return red
+        return compat.shard_map(body, mesh=mesh,
+                                in_specs=(P(),), out_specs=P(),
+                                check_vma=False)(v)
+    out["compressed"] = np.asarray(jax.jit(comp)(g)).tolist()
+    out["compressed_want"] = np.asarray(g * 8.0).tolist()
+
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_tc_collectives_match_psum_oracles_multidevice():
+    """tc_psum / tc_global_norm on a (4 data x 2 model) mesh match the
+    lax.psum-based oracles under jit + shard_map, method='auto'
+    resolves mesh-keyed plans distinct from the single-device keys,
+    and every ablation engine serves as the local-partial engine."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    p = subprocess.run([sys.executable, "-c", _MESH_PROG],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert p.returncode == 0, p.stderr[-3000:]
+    line = [l for l in p.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    np.testing.assert_allclose(out["tc_psum"], out["psum_oracle"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(out["tc_norm"], out["norm_oracle"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(out["tc_norm_gspmd"],
+                               out["norm_oracle"], rtol=1e-5)
+    np.testing.assert_allclose(out["auto_under_mesh"],
+                               out["psum_oracle"], rtol=1e-5,
+                               atol=1e-3)
+    np.testing.assert_allclose(out["tc_psum_pallas"],
+                               out["psum_oracle"], rtol=1e-5,
+                               atol=1e-3)
+    np.testing.assert_allclose(out["tc_psum_chained"],
+                               out["psum_oracle"], rtol=1e-5,
+                               atol=1e-3)
+    # acceptance: mesh-keyed plans exist and never collide with the
+    # single-device key space
+    assert out["mesh_keys"], "no mesh-keyed plan was resolved"
+    assert all(k.endswith("|mesh:data4.model2")
+               for k in out["mesh_keys"])
+    assert out["mesh_key"] == out["single_key"] + "|mesh:data4.model2"
+    # a leaf sharding over only a mesh-axis subset keys by that subset
+    np.testing.assert_allclose(out["partial"], out["partial_want"],
+                               rtol=1e-5, atol=1e-3)
+    assert out["partial_keys"]
+    # int8 error-feedback psum: sum of 8 identical shards, to
+    # quantisation tolerance
+    np.testing.assert_allclose(out["compressed"],
+                               out["compressed_want"], atol=0.3)
