@@ -3,22 +3,43 @@ CPU oracle, for normal[0,1] and uniform[0,1] inputs, across n.
 
 Hardware-faithful on this container: bf16/f32 arithmetic is bit-exact in
 XLA regardless of backend.  Reproduces the paper's qualitative claims
-with the TPU adaptation (DESIGN.md §8): single-pass stays accurate on
-both distributions; the recurrence variant with low-precision partials
-degrades on uniform inputs (paper: FP16 overflow; bf16: precision loss,
-no overflow — bf16 carries f32's exponent)."""
+with the TPU adaptation (docs/design-notes.md §8): single-pass stays
+accurate on both distributions; the recurrence variant with
+low-precision partials degrades on uniform inputs (paper: FP16
+overflow; bf16: precision loss, no overflow — bf16 carries f32's
+exponent).
+
+Second table — the **error/time frontier** (the Figs. 7/8 analogue for
+the precision-policy subsystem): each registry engine (``vpu`` /
+``mma`` / ``mma_ec`` at 2 and 3 split words) is timed through the
+single executor and scored against the fp64 oracle, emitting
+``pct_err`` plus the runtime ratio vs the plain ``mma`` contraction —
+the trade the error-budget-aware autotuner navigates.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
-from repro.core import tc_reduce
+from benchmarks.common import emit, time_us
+from repro.core import dispatch, tc_reduce
+from repro.core.autotune import ReductionPlan
 from repro.core.precision import (normal_input, percent_error,
                                   uniform_input)
 
 SIZES = [1 << 16, 1 << 20, 1 << 23]
+
+# The frontier's engine column: (label, plan).
+FRONTIER = [
+    ("vpu", ReductionPlan(method="vpu")),
+    ("mma", ReductionPlan(method="mma")),
+    ("mma_ec_w2", ReductionPlan(method="mma_ec", chain=2,
+                                split_words=2)),
+    ("mma_ec_w3", ReductionPlan(method="mma_ec", chain=2,
+                                split_words=3)),
+]
 
 
 def _cases():
@@ -47,6 +68,41 @@ def run():
                 err = percent_error(got, x)
                 emit(f"precision/{dist}/{name}/n={n}", 0.0,
                      f"pct_err={err:.3e}")
+    frontier()
+
+
+def frontier():
+    """Error/time frontier: engines x {uniform, normal}, f32 inputs.
+
+    Two runtime ratios per row: ``x_mma`` is the measured wall-clock
+    ratio vs the plain contraction *on this backend* (XLA-CPU emulates
+    bf16 dots at near-f32 cost, so the split words pay ~full price
+    here), and ``model_x_mma`` is the analytical cost-model ratio —
+    the TPU-faithful number, where a bf16 ones-MMA chain is MXU-native
+    and the w=2 compensated engine lands within 2x the plain mma."""
+    from repro.core.autotune import model_cost
+    for dist, gen in (("uniform", uniform_input), ("normal",
+                                                   normal_input)):
+        for n in SIZES:
+            x32 = gen(n, seed=5).astype(np.float32)
+            xj = jnp.asarray(x32)
+            x64 = x32.astype(np.float64)
+            # Time the plain-mma reference first so EVERY row —
+            # including vpu's — carries both ratios.
+            mma_plan = dict(FRONTIER)["mma"]
+            mma_us = time_us(jax.jit(
+                lambda v: dispatch.execute("reduce_sum", v,
+                                           mma_plan)), xj)
+            mma_model = model_cost(mma_plan, n, jnp.float32)
+            for name, plan in FRONTIER:
+                fn = jax.jit(lambda v, p=plan: dispatch.execute(
+                    "reduce_sum", v, p))
+                us = mma_us if name == "mma" else time_us(fn, xj)
+                model = model_cost(plan, n, jnp.float32)
+                err = percent_error(float(fn(xj)), x64)
+                emit(f"frontier/{dist}/{name}/n={n}", us,
+                     f"pct_err={err:.3e},x_mma={us / mma_us:.2f}"
+                     f",model_x_mma={model / mma_model:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,13 @@
 """Paper Fig. 6: the split variant — fraction f of the domain on the
 matrix unit, 1-f on the vector unit (paper §5.3).  On TPU the MXU and
 VPU genuinely co-execute, which is the paper's hypothesis; the dry-run
-HLO shows both op classes issued."""
+HLO shows both op classes issued.
+
+Routed through the TC-op registry's single executor
+(``repro.core.dispatch.execute`` under a ``ReductionPlan`` whose
+``variant='split'`` / ``mma_fraction`` fields carry the knobs) — the
+same path ``method='auto'`` plans run on, so the sweep times exactly
+what dispatch would execute, not a side door into ``tc_reduce``."""
 
 from __future__ import annotations
 
@@ -9,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_us
-from repro.core import tc_reduce
+from repro.core import dispatch
+from repro.core.autotune import ReductionPlan
 from repro.core.precision import normal_input
 
 N = 1 << 20
@@ -20,9 +27,11 @@ def run():
     x = jnp.asarray(normal_input(N, seed=3).astype(np.float32))
     want = float(np.sum(np.asarray(x), dtype=np.float64))
     for f in FRACTIONS:
-        us = time_us(lambda v, fr=f: tc_reduce(v, variant="split",
-                                               mma_fraction=fr), x)
-        got = float(tc_reduce(x, variant="split", mma_fraction=f))
+        plan = ReductionPlan(method="mma_chained", variant="split",
+                             chain=4, mma_fraction=f)
+        us = time_us(
+            lambda v, p=plan: dispatch.execute("reduce_sum", v, p), x)
+        got = float(dispatch.execute("reduce_sum", x, plan))
         emit(f"split/f={f}", us, f"err={abs(got - want):.2e}")
 
 

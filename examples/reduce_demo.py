@@ -38,8 +38,8 @@ def main():
             print(" ".join(row))
     print("\npaper's finding reproduced: the recurrence variant with "
           "low-precision partials degrades on uniform inputs (FP16 "
-          "overflowed on GPUs; bf16 loses mantissa instead — DESIGN.md "
-          "§8), while single-pass stays at f32-level error.")
+          "overflowed on GPUs; bf16 loses mantissa instead — "
+          "docs/design-notes.md §8), while single-pass stays at f32-level error.")
 
 
 if __name__ == "__main__":

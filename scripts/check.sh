@@ -17,13 +17,24 @@
 #            dispatch.py).  Every other module must route through
 #            repro.core.dispatch.dispatch() — a grep hit here means a
 #            new per-op ladder crept back in;
+#   pins     structural guard: raw accumulator/matmul precision pins
+#            (`preferred_element_type=jnp.*`, `Precision.HIGHEST`) are
+#            only allowed inside the policy module (src/repro/core/
+#            precision.py).  Everything else must reference
+#            precision.ACCUM_DTYPE or carry an MmaPolicy — a hit means
+#            an ad-hoc precision decision crept back in;
 #   bytecode structural guard: no __pycache__/ or *.pyc path may be
 #            git-tracked (.gitignore keeps new ones out; this catches
 #            anything force-added or resurrected);
-#   docs     scripts/check_docs.py — markdown links/anchors resolve and
+#   docs     scripts/check_docs.py — markdown links/anchors resolve,
 #            every backticked `repro.*` symbol / repo path in README +
-#            docs/ maps to real code (broken cross-references fail
-#            tier-1 locally);
+#            docs/ maps to real code, and every *.md reference in
+#            Python docstrings/comments names a real doc (broken
+#            cross-references fail tier-1 locally);
+#   errbudget scripts/check_error_budget.py — fast fp64-oracle
+#            percent-error sweep over every reduce engine with hard
+#            per-engine ceilings (the precision subsystem's accuracy
+#            contract as a regression gate);
 #   doctest  pytest --doctest-modules over src/repro/core (the
 #            integration-hook examples);
 #   suite    python -m pytest -x -q (the ROADMAP tier-1 command).
@@ -47,6 +58,16 @@ if grep -rn "method ==" src --include='*.py' \
 fi
 echo "ok: engine selection only inside the TC-op registry"
 
+echo "== precision-pin guard =="
+if grep -rnE "preferred_element_type=jnp\.|preferred_element_type=jax\.numpy\.|Precision\.HIGHEST" \
+        src --include='*.py' | grep -v "core/precision.py"; then
+    echo "FAIL: raw precision pin outside the policy module —" \
+         "import ACCUM_DTYPE (or thread an MmaPolicy) from" \
+         "repro.core.precision instead" >&2
+    exit 1
+fi
+echo "ok: accumulator/matmul precision pinned only in the policy module"
+
 echo "== tracked-bytecode guard =="
 if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
     echo "FAIL: compiled bytecode is git-tracked —" \
@@ -57,6 +78,9 @@ echo "ok: no git-tracked __pycache__/*.pyc paths"
 
 echo "== docs =="
 python scripts/check_docs.py
+
+echo "== error budget =="
+python scripts/check_error_budget.py
 
 echo "== doctest =="
 python -m pytest --doctest-modules src/repro/core -q

@@ -13,6 +13,16 @@ Validates, over README.md and every markdown file under docs/:
      ``benchmarks/bench_scan.py``, …) exists on disk (shorthand paths
      are also tried under src/repro/).
 
+And, over every Python file in the repo (src/, tests/, benchmarks/,
+examples/, scripts/):
+
+  4. every markdown-file reference in docstrings/comments (e.g.
+     ``docs/design-notes.md §8``) names a file that exists, at the
+     path as written or under docs/ — a doc renamed or deleted out
+     from under its code references fails tier-1 (the regression
+     class that left five sources citing a deleted design doc).
+     Declared build artifacts (``_GENERATED_DOCS``) are exempt.
+
 Exit status 0 iff everything resolves; failures are listed one per
 line.  Stdlib + the repo itself only — no new dependencies.
 
@@ -33,6 +43,16 @@ SYMBOL_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
 PATH_RE = re.compile(r"`([\w./-]+/[\w.-]+\.(?:py|md|sh|json|txt))`")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+# Markdown-file tokens inside Python sources: at least one word char
+# before ".md" so ``.endswith(".md")`` string literals don't match.
+MD_REF_RE = re.compile(r"(?<![\w/.-])((?:[\w.-]+/)*[\w][\w.-]*\.md)\b")
+
+# Docs produced by tooling rather than tracked in the repo
+# (benchmarks/report.py writes EXPERIMENTS.md from the dry-run JSONs).
+_GENERATED_DOCS = {"EXPERIMENTS.md"}
+
+PY_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
 
 
 def doc_files() -> list[str]:
@@ -113,6 +133,30 @@ def check_paths(path: str, text: str, errors: list[str]) -> None:
                           f"path `{p}`")
 
 
+def py_files() -> list[str]:
+    out = []
+    for d in PY_DIRS:
+        top = os.path.join(ROOT, d)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [x for x in dirnames
+                           if x != "__pycache__"]
+            out += [os.path.join(dirpath, f) for f in filenames
+                    if f.endswith(".py")]
+    return sorted(out)
+
+
+def check_py_doc_refs(path: str, text: str, errors: list[str]) -> None:
+    """Every ``*.md`` token in a Python source must name a real doc."""
+    for ref in sorted(set(MD_REF_RE.findall(text))):
+        if os.path.basename(ref) in _GENERATED_DOCS:
+            continue
+        cands = [os.path.join(ROOT, ref),
+                 os.path.join(ROOT, "docs", ref)]
+        if not any(os.path.exists(c) for c in cands):
+            errors.append(f"{os.path.relpath(path, ROOT)}: dangling "
+                          f"doc reference `{ref}`")
+
+
 def main() -> int:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     errors: list[str] = []
@@ -127,9 +171,14 @@ def main() -> int:
         prose = CODE_FENCE_RE.sub("", text)
         check_symbols(path, prose, errors)
         check_paths(path, prose, errors)
+    sources = py_files()
+    for path in sources:
+        with open(path, encoding="utf-8") as f:
+            check_py_doc_refs(path, f.read(), errors)
     for e in errors:
         print(f"FAIL {e}")
-    print(f"check_docs: {len(files)} files, {len(errors)} errors")
+    print(f"check_docs: {len(files)} docs + {len(sources)} sources, "
+          f"{len(errors)} errors")
     return 1 if errors else 0
 
 

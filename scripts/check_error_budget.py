@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Error-budget regression gate — the `error-budget` step of tier-1.
+
+Runs the paper's fp64-oracle percent-error harness
+(`repro.core.precision.percent_error`, §5.4) over every reduce-family
+engine at a fast probe size and fails if any engine's error exceeds
+its hard ceiling.  The ceilings encode the subsystem's accuracy
+contract on this (XLA-CPU) backend with ~20x headroom over measured
+values, so a numerics regression — a lost f32 accumulator, a dropped
+compensation term, a split word that stops reconstructing — fails CI
+before it ships:
+
+  * the classic baseline and the plain MMA engines must stay at
+    f32-accumulation error levels;
+  * the compensated `mma_ec` / `pallas_ec` family must stay an order
+    of magnitude *below* them (that is the engine's reason to exist).
+
+XLA-CPU arithmetic is deterministic for a fixed input, so the gate
+does not flake; two seeds guard against a single lucky draw.
+
+Usage:  PYTHONPATH=src python scripts/check_error_budget.py
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+from repro.core.autotune import ReductionPlan
+from repro.core.precision import percent_error, uniform_input
+
+PROBE_N = 1 << 16
+SEEDS = (0, 1)
+
+# (label, op, plan, percent-error ceiling on uniform [0,1] f32).
+GATES = [
+    ("vpu", "reduce_sum", ReductionPlan(method="vpu"), 5e-4),
+    ("mma", "reduce_sum", ReductionPlan(method="mma"), 5e-3),
+    ("mma_chained", "reduce_sum",
+     ReductionPlan(method="mma_chained", chain=4), 5e-3),
+    ("pallas", "reduce_sum",
+     ReductionPlan(method="pallas", chain=4), 5e-3),
+    ("mma_ec_w2", "reduce_sum",
+     ReductionPlan(method="mma_ec", chain=2, split_words=2), 1e-4),
+    ("mma_ec_w3", "reduce_sum",
+     ReductionPlan(method="mma_ec", chain=2, split_words=3), 1e-4),
+    ("pallas_ec_w2", "reduce_sum",
+     ReductionPlan(method="pallas_ec", chain=2, split_words=2), 1e-4),
+    ("sq_mma_ec_w2", "squared_sum",
+     ReductionPlan(method="mma_ec", chain=2, split_words=2), 1e-4),
+    ("sq_vpu", "squared_sum", ReductionPlan(method="vpu"), 5e-4),
+]
+
+
+def main() -> int:
+    failures = 0
+    for seed in SEEDS:
+        x32 = uniform_input(PROBE_N, seed=seed).astype(np.float32)
+        xj = jnp.asarray(x32)
+        for label, op, plan, ceiling in GATES:
+            got = float(dispatch.execute(op, xj, plan))
+            oracle_in = x32.astype(np.float64)
+            if op == "squared_sum":
+                oracle_in = oracle_in ** 2
+            err = percent_error(got, oracle_in)
+            ok = err <= ceiling
+            mark = "ok  " if ok else "FAIL"
+            print(f"{mark} {label:<14s} seed={seed} "
+                  f"pct_err={err:.3e} ceiling={ceiling:.0e}")
+            failures += 0 if ok else 1
+    print(f"check_error_budget: {len(GATES) * len(SEEDS)} gates, "
+          f"{failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,9 +3,9 @@ vocab=129280; MLA (q-LoRA 1536, kv-LoRA 512, nope 128, rope 64, v 128);
 MoE: 1 shared + 256 routed experts (d_ff 2048) top-8, sigmoid router with
 routed scaling 2.5, first 3 layers dense; MTP head. [arXiv:2412.19437; hf]
 
-Simplifications recorded in DESIGN.md: node-limited routing group
-selection and the aux-free bias update are replaced by a standard
-load-balance aux loss (weight 1e-4)."""
+Simplifications recorded in docs/design-notes.md §6: node-limited
+routing group selection and the aux-free bias update are replaced by
+a standard load-balance aux loss (weight 1e-4)."""
 
 import dataclasses
 

@@ -21,7 +21,8 @@ _MODULES = {
 }
 
 # Sub-quadratic archs: the only ones that run the long_500k decode cell
-# (see DESIGN.md §7 for the skip rationale on the other eight).
+# (see docs/design-notes.md §7 for the skip rationale on the
+# other eight).
 SUBQUADRATIC = ("rwkv6-7b", "recurrentgemma-2b")
 
 

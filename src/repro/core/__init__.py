@@ -8,6 +8,7 @@ from repro.core.reduction import (  # noqa: F401
     tc_contract,
     tc_reduce,
     tc_reduce_axes,
+    tc_reduce_ec,
     tc_reduce_lastdim,
     tc_reduce_rows,
 )
@@ -15,7 +16,12 @@ from repro.core.scan import (  # noqa: F401
     tc_cumprod,
     tc_linear_recurrence,
     tc_scan,
+    tc_scan_ec,
     tc_segment_reduce,
+)
+from repro.core.precision import (  # noqa: F401
+    ACCUM_DTYPE,
+    MmaPolicy,
 )
 from repro.core.integration import (  # noqa: F401
     cumsum,

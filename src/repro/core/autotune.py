@@ -15,8 +15,9 @@ module makes that selection automatic:
     style: PRAM depth (Eq. 24) + work/parallelism + per-grid-step
     overhead + padding waste — so a plan exists even with no hardware;
   * ``PlanRegistry``      caches winners keyed by (op, n-bucket, dtype,
-    backend[, engine][, mesh-signature]), survives a JSON round-trip,
-    and can be pre-seeded from a file (``REPRO_AUTOTUNE_CACHE``);
+    backend[, engine][, precision-signature][, mesh-signature]),
+    survives a JSON round-trip, and can be pre-seeded from a file
+    (``REPRO_AUTOTUNE_CACHE``);
   * ``get_plan``          the one-call entry the framework hooks
     (``integration.reduce_sum(method="auto")`` etc.) consult.
 
@@ -80,17 +81,26 @@ class ReductionPlan:
     """One executable reduction configuration.
 
     ``method`` selects the execution engine (the ``integration.Method``
-    namespace); variant/chain/block_rows are the paper's knobs.  ``cost``
-    is the score that won the sweep, in microseconds when
-    ``source='measured'`` and in model units when ``source='model'``.
+    namespace); variant/chain/block_rows are the paper's knobs;
+    ``split_words`` is the compensated family's bf16-word count (2 =
+    hi+lo, 3 = exact f32 — ignored by the plain engines) and
+    ``mma_fraction`` the split variant's MXU share.  ``cost`` is the
+    score that won the sweep, in microseconds when
+    ``source='measured'`` and in model units when ``source='model'``;
+    ``error_pct`` is the percent-error estimate the budget-aware sweep
+    scored this plan with (None when no budget applied).
     """
-    method: str                 # 'mma' | 'mma_chained' | 'pallas' | 'vpu'
+    method: str   # 'mma' | 'mma_chained' | 'mma_ec' | 'pallas' |
+    #               'pallas_ec' | 'vpu'
     variant: str = "single_pass"
     chain: int = 1
     block_rows: int = 128
     m: int = DEFAULT_M
+    split_words: int = 2
+    mma_fraction: float = 0.5
     source: str = "model"       # 'model' | 'measured'
     cost: float = 0.0
+    error_pct: Optional[float] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -187,23 +197,37 @@ def _engine_tag(engine: Engine) -> str:
     return "" if methods is None else "|" + "+".join(methods)
 
 
+# policy argument: None, or a repro.core.precision.MmaPolicy.
+PolicyArg = Optional[object]
+
+
+def _prec_tag(policy: PolicyArg) -> str:
+    return "" if policy is None else f"|prec:{policy.signature()}"
+
+
 def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
-             engine: Engine = None, mesh: MeshArg = None) -> str:
-    """Registry key: op|n-bucket|dtype|backend[|engine][|mesh:sig] (a
-    flat string so the registry JSON-serialises as a plain object).
+             engine: Engine = None, mesh: MeshArg = None,
+             policy: PolicyArg = None) -> str:
+    """Registry key: op|n-bucket|dtype|backend[|engine][|prec:sig]
+    [|mesh:sig] (a flat string so the registry JSON-serialises as a
+    plain object).
 
     The engine suffix appears only for engine-restricted tunes (e.g.
     the tc_reduce / mma_reduce 'auto' spellings), so a per-engine
     geometry plan never collides with the unrestricted cross-engine
-    winner.  The mesh suffix (``|mesh:data4.model2`` — see
-    ``mesh_signature``) appears only under a live >1-device mesh: a
-    mesh-keyed plan describes the *local per-device* chain geometry of
-    a size-n global problem, so it never collides with the
-    single-device plan for the same n."""
+    winner.  The precision suffix (``|prec:any.float32.w2.b0.001`` —
+    ``repro.core.precision.MmaPolicy.signature``) appears whenever the
+    call carried a policy: plans tuned under different input dtypes,
+    split-word pins, or error budgets live under their own keys.  The
+    mesh suffix (``|mesh:data4.model2`` — see ``mesh_signature``)
+    appears only under a live >1-device mesh: a mesh-keyed plan
+    describes the *local per-device* chain geometry of a size-n global
+    problem, so it never collides with the single-device plan for the
+    same n."""
     if backend is None:
         backend = jax.default_backend()
     return (f"{op}|{bucket_n(n)}|{jax.numpy.dtype(dtype).name}|{backend}"
-            f"{_engine_tag(engine)}{_mesh_tag(mesh)}")
+            f"{_engine_tag(engine)}{_prec_tag(policy)}{_mesh_tag(mesh)}")
 
 
 # VMEM feasibility for Pallas tiles: input tile + f32 working copy,
@@ -211,21 +235,30 @@ def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
 _VMEM_BUDGET = 16 * 2**20
 
 
+# The split-word counts the compensated engines sweep when no policy
+# pins one: hi+lo (~16-bit multiplicands) and hi+mid+lo (exact f32).
+SPLIT_WORDS = (2, 3)
+
+
 def candidate_plans(n: int, dtype, *, chains=CHAINS, blocks=BLOCK_ROWS,
                     m: int = DEFAULT_M, engine: Engine = None,
-                    op: str = "reduce_sum") -> Iterator[ReductionPlan]:
+                    op: str = "reduce_sum",
+                    policy: PolicyArg = None) -> Iterator[ReductionPlan]:
     """Enumerate the sweep space for one problem, off the op registry.
 
     The op's ``repro.core.dispatch.OpSpec`` declares the engines; each
     engine's ``sweep`` declares its knobs: geometry-free engines (the
     'mma' ones-contraction, the 'vpu' baseline) contribute one
-    candidate, ``('chain',)`` engines sweep the paper's R, and
-    ``('chain', 'block_rows')`` engines sweep the full R x B grid.
-    ``engine`` narrows the space to one engine (or a tuple) — how the
-    per-engine 'auto' geometry spellings get a plan actually tuned for
-    the engine they run.  VMEM-tiled (block_rows-swept) plans are
-    pruned when the tile would not fit on-chip (dtype-dependent) or
-    would be strictly more padding than a smaller config.
+    candidate, ``('chain',)`` engines sweep the paper's R,
+    ``('chain', 'block_rows')`` engines sweep the full R x B grid, and
+    the compensated family additionally sweeps ``split_words`` over
+    ``SPLIT_WORDS`` — unless ``policy`` pins a word count, in which
+    case only that count is enumerated.  ``engine`` narrows the space
+    to one engine (or a tuple) — how the per-engine 'auto' geometry
+    spellings get a plan actually tuned for the engine they run.
+    VMEM-tiled (block_rows-swept) plans are pruned when the tile would
+    not fit on-chip (dtype-dependent) or would be strictly more
+    padding than a smaller config.
     """
     from repro.core import dispatch
     spec = dispatch.op_spec(op)
@@ -234,25 +267,45 @@ def candidate_plans(n: int, dtype, *, chains=CHAINS, blocks=BLOCK_ROWS,
     for eng in spec.engines:
         if methods is not None and eng.name not in methods:
             continue
+        if policy is not None:
+            # Policy capability facts prune the sweep itself, so every
+            # enumeration path (dispatch auto, local_plan, direct
+            # get_plan) can only ever tune a plan the policy's
+            # execute-time predicates will accept.
+            if policy.split_words > eng.max_split_words:
+                continue
+            if jax.numpy.dtype(policy.accum_dtype).name \
+                    not in eng.accum_dtypes:
+                continue
+        if "split_words" not in eng.sweep:
+            words_opts = (ReductionPlan.split_words,)
+        elif policy is not None and policy.split_words > 1:
+            words_opts = (int(policy.split_words),)
+        else:
+            words_opts = SPLIT_WORDS
         if not eng.sweep:
             yield ReductionPlan(method=eng.name)
             continue
         eng_chains = chains if "chain" in eng.sweep else (1,)
         if "block_rows" not in eng.sweep:
             for chain in eng_chains:
-                yield ReductionPlan(method=eng.name, chain=chain, m=m)
+                for words in words_opts:
+                    yield ReductionPlan(method=eng.name, chain=chain,
+                                        m=m, split_words=words)
             continue
-        prev_tile = 0
-        for chain in eng_chains:
-            for block_rows in blocks:
-                tile = chain * block_rows * m
-                if 2 * tile * (itemsize + 4) > _VMEM_BUDGET:
-                    continue  # double-buffered tile would not fit VMEM
-                if tile > max(n, 1) and prev_tile > max(n, 1):
-                    continue  # strictly more padding than a smaller one
-                prev_tile = tile
-                yield ReductionPlan(method=eng.name, chain=chain,
-                                    block_rows=block_rows, m=m)
+        for words in words_opts:
+            prev_tile = 0
+            for chain in eng_chains:
+                for block_rows in blocks:
+                    tile = chain * block_rows * m
+                    if 2 * tile * (itemsize + 4) > _VMEM_BUDGET:
+                        continue  # double-buffered tile exceeds VMEM
+                    if tile > max(n, 1) and prev_tile > max(n, 1):
+                        continue  # strictly more padding than smaller
+                    prev_tile = tile
+                    yield ReductionPlan(method=eng.name, chain=chain,
+                                        block_rows=block_rows, m=m,
+                                        split_words=words)
 
 
 # --------------------------------------------------------------- cost
@@ -308,14 +361,112 @@ def _cost_chained(family: str, plan: ReductionPlan, n: int,
     return depth + work + grid + waste
 
 
+def _cost_ec(family: str, plan: ReductionPlan, n: int,
+             itemsize: int, *, grid_walk: bool = False) -> float:
+    # Compensated split-bf16 engines: one MMA chain per word, plus the
+    # split's elementwise passes (one cast + one subtract per extra
+    # word) and the TwoSum combine tree — the tree touches every one
+    # of the w * n / (chain * m) lane partials once (vectorised,
+    # halving), plus a per-level overhead.
+    w = max(int(plan.split_words), 1)
+    base = _cost_chained(family, plan, n, itemsize, grid_walk=grid_walk)
+    split = (2 * w - 1) * n / (_VPU_THROUGHPUT * _PARALLELISM)
+    lanes = w * n / max(plan.chain * plan.m, 1)
+    combine = 2.0 * lanes / (_VPU_THROUGHPUT * _PARALLELISM) \
+        + 6.0 * math.log2(max(lanes, 2.0))
+    return w * base + split + combine
+
+
 # Per-engine scoring — keyed, not branched, so the only place engine
 # names select behaviour stays the dispatch registry.
 _ENGINE_COSTS = {
     "vpu": _cost_vpu,
     "mma": _cost_mma,
     "mma_chained": _cost_chained,
+    "mma_ec": _cost_ec,
     "pallas": functools.partial(_cost_chained, grid_walk=True),
+    "pallas_ec": functools.partial(_cost_ec, grid_walk=True),
 }
+
+
+# ------------------------------------------------------- error model
+
+_EPS32 = 2.0 ** -24     # f32 unit roundoff
+_BF16_BITS = 8          # bf16 significand bits (incl. implicit)
+_F32_BITS = 24
+
+
+# The TwoSum-compensated engine family (keyed, like _ENGINE_COSTS, so
+# engine-name selection stays out of branch ladders) and the per-engine
+# multiplicand widths: the VPU baseline keeps full f32; None marks the
+# split family, whose width is 8 bits per word; every other
+# matrix-unit engine truncates f32 multiplicands to bf16 (TF32/bf16
+# MXU semantics).
+_COMPENSATED = frozenset({"mma_ec", "pallas_ec"})
+_ENGINE_BITS = {"vpu": _F32_BITS, "mma_ec": None, "pallas_ec": None}
+
+
+def _multiplicand_bits(plan: ReductionPlan, dtype) -> int:
+    """Effective significand bits the engine's multiplicands carry.
+    A bf16 *input* caps everything at 8."""
+    in_bits = _BF16_BITS if jax.numpy.dtype(dtype).name == "bfloat16" \
+        else _F32_BITS
+    eng_bits = _ENGINE_BITS.get(plan.method, _BF16_BITS)
+    if eng_bits is None:
+        eng_bits = min(_BF16_BITS * max(int(plan.split_words), 1),
+                       _F32_BITS)
+    return min(in_bits, eng_bits)
+
+
+def model_percent_error(plan: ReductionPlan, n: int, dtype,
+                        op: str = "reduce_sum") -> float:
+    """Modelled % error vs the fp64 oracle — the budget-aware sweep's
+    hardware-free score (the analytical analogue of
+    ``repro.core.precision.percent_error``).
+
+    Two terms: a **representation** term 2^-(bits+1) from the
+    effective multiplicand width (see ``_multiplicand_bits`` — this is
+    where bf16-truncating MMAs pay and the split-bf16 words earn their
+    keep), and an **accumulation** term — ~eps32 * sqrt(n) of random-
+    walk rounding for the uncompensated engines, ~eps32^2 * n +
+    one final rounding for the TwoSum-compensated family.  The model
+    ranks engines for budget filtering; ``measure=True`` sweeps
+    replace it with the measured harness
+    (``measured_percent_error``).
+    """
+    n = max(int(n), 1)
+    rep = 2.0 ** -(_multiplicand_bits(plan, dtype) + 1)
+    if plan.method in _COMPENSATED:
+        acc = _EPS32 * _EPS32 * n + 2.0 ** -25
+    else:
+        acc = _EPS32 * math.sqrt(n)
+    return 100.0 * (rep + acc)
+
+
+def measured_percent_error(plan: ReductionPlan, n: int, dtype, *,
+                           op: str = "reduce_sum",
+                           seed: int = 0) -> float:
+    """Measured % error vs the fp64 oracle for one plan (the paper's
+    harness, §5.4): a uniform-[0,1] problem — the paper's hard case —
+    of the bucket size is executed under ``plan`` and compared against
+    the double-precision CPU sum.  Reduce-family only (scalar
+    contract); other families fall back to the analytical model.  The
+    probe is capped at 2^22 elements so a measured budget sweep stays
+    interactive."""
+    import numpy as np
+    from repro.core import dispatch, precision
+    spec = dispatch.op_spec(op)
+    if spec.family != "reduce" or spec.measure is not None:
+        return model_percent_error(plan, n, dtype, op=op)
+    probe_n = min(max(int(n), 1), 1 << 22)
+    x64 = precision.uniform_input(probe_n, seed=seed)
+    x = jax.numpy.asarray(x64.astype(np.float32)).astype(dtype)
+    got = float(execute_plan(x, plan, op=op))
+    if op == "squared_sum":
+        x64 = np.asarray(x, np.float64) ** 2
+    else:
+        x64 = np.asarray(x, np.float64)
+    return precision.percent_error(got, x64)
 
 
 def model_cost(plan: ReductionPlan, n: int, dtype,
@@ -573,7 +724,8 @@ def reset_default_registry() -> None:
 def autotune(n: int, dtype, *, op: str = "reduce_sum",
              measure: bool = False, chains=CHAINS, blocks=BLOCK_ROWS,
              m: int = DEFAULT_M, engine: Engine = None,
-             mesh: MeshArg = None) -> ReductionPlan:
+             mesh: MeshArg = None,
+             policy: PolicyArg = None) -> ReductionPlan:
     """Sweep the candidate space for one problem and return the winner.
 
     ``measure=False`` (default, and the only mode that is deterministic
@@ -591,6 +743,17 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
     block_rows.  Inside a ``shard_map`` body every engine is structurally
     legal (the shard is local), so the mesh sweep is *not* restricted to
     the distribution-safe engines the way the pjit auto path is.
+
+    With a ``policy`` carrying an ``error_budget_pct`` the sweep is
+    **error-budget-aware**: every candidate is additionally scored by
+    percent error vs the fp64 oracle (``model_percent_error``, or the
+    measured harness ``measured_percent_error`` when
+    ``measure=True``), and the winner is the *fastest candidate whose
+    error meets the budget* — the paper's accuracy contract made a
+    selection constraint.  When no candidate meets the budget the
+    most accurate one wins (best effort — a training step must not
+    fail because a ceiling was set too tight; the plan's recorded
+    ``error_pct`` makes the shortfall visible).
     """
     axes = mesh_axes(mesh)
     nb = bucket_n(n)
@@ -603,9 +766,12 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
     local_nb = nb if axes is None else bucket_n(local)
     measure_nb = nb if axes is None else local * need
     combine = combine_model_cost(axes)
-    best: Optional[ReductionPlan] = None
+    budget = None if policy is None else policy.error_budget_pct
+    best: Optional[ReductionPlan] = None          # meets the budget
+    fallback: Optional[ReductionPlan] = None      # most accurate seen
     for cand in candidate_plans(local_nb, dtype, chains=chains,
-                                blocks=blocks, m=m, engine=engine, op=op):
+                                blocks=blocks, m=m, engine=engine,
+                                op=op, policy=policy):
         if measure:
             cost = measure_cost(cand, measure_nb, dtype, op=op,
                                 mesh=axes)
@@ -613,8 +779,19 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
         else:
             cost = model_cost(cand, local_nb, dtype, op=op) + combine
             cand = dataclasses.replace(cand, source="model", cost=cost)
+        if budget is not None:
+            err = (measured_percent_error(cand, local_nb, dtype, op=op)
+                   if measure else
+                   model_percent_error(cand, local_nb, dtype, op=op))
+            cand = dataclasses.replace(cand, error_pct=err)
+            if fallback is None or err < fallback.error_pct:
+                fallback = cand
+            if err > budget:
+                continue
         if best is None or cand.cost < best.cost:
             best = cand
+    if best is None:
+        best = fallback     # nothing met the budget: most accurate
     if best is None:
         raise ValueError(f"no reduction candidates for engine={engine!r}")
     return best
@@ -624,23 +801,26 @@ def get_plan(n: int, dtype, *, op: str = "reduce_sum",
              backend: Optional[str] = None,
              registry: Optional[PlanRegistry] = None,
              measure: bool = False, engine: Engine = None,
-             mesh: MeshArg = None) -> ReductionPlan:
+             mesh: MeshArg = None,
+             policy: PolicyArg = None) -> ReductionPlan:
     """Cached plan lookup — the entry point of ``method='auto'``.
 
     Registry hit: return it (a model-mode entry is re-tuned and
     replaced when ``measure=True`` asks for wall-clock evidence).
     Miss: run ``autotune`` once for the (op, n-bucket, dtype, backend
-    [, engine][, mesh]) key and cache the winner.  ``mesh`` keys (and
-    tunes) the plan for the local shard of a size-n global problem
-    under that mesh shape — the mesh-collective path
+    [, engine][, prec][, mesh]) key and cache the winner.  ``mesh``
+    keys (and tunes) the plan for the local shard of a size-n global
+    problem under that mesh shape — the mesh-collective path
     (``repro.distributed.tc_collectives``) and the auto path under a
     live mesh both resolve here, so a sharded run never silently
-    reuses the single-device geometry.  Measuring for a backend other
-    than the live one is refused rather than silently timed on the
-    wrong hardware.
+    reuses the single-device geometry.  ``policy`` keys the plan by
+    the precision signature and makes the sweep error-budget-aware
+    (see ``autotune``) — two calls differing only in budget resolve
+    independent plans.  Measuring for a backend other than the live
+    one is refused rather than silently timed on the wrong hardware.
     """
     reg = registry if registry is not None else default_registry()
-    key = plan_key(op, n, dtype, backend, engine, mesh)
+    key = plan_key(op, n, dtype, backend, engine, mesh, policy)
     plan = reg.get(key)
     if plan is not None and not (measure and plan.source != "measured"):
         return plan
@@ -651,6 +831,6 @@ def get_plan(n: int, dtype, *, op: str = "reduce_sum",
             f"{jax.default_backend()!r} host; use the analytical model "
             f"(measure=False) or tune on the target hardware")
     plan = autotune(n, dtype, op=op, measure=measure, engine=engine,
-                    mesh=mesh)
+                    mesh=mesh, policy=policy)
     reg.put(key, plan)
     return plan

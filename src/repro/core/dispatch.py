@@ -11,11 +11,16 @@ place that knowledge lives: each op (``reduce_sum``, ``squared_sum``,
 
   * its execution engines (:class:`EngineSpec`): the ones-contraction
     ``'mma'``, the explicitly chained ``'mma_chained'`` core, the
-    hand-tiled ``'pallas'`` kernel, and the classic ``'vpu'`` baseline
-    — each with a ``run(x, plan, **op_kwargs)`` callable;
+    compensated split-bf16 ``'mma_ec'`` family (and its Pallas twin
+    ``'pallas_ec'``), the hand-tiled ``'pallas'`` kernel, and the
+    classic ``'vpu'`` baseline — each with a ``run(x, plan,
+    **op_kwargs)`` callable;
   * per-engine **capability predicates** — multi-device safety, axis /
-    ndim / layout support, dtype restrictions — evaluated against a
-    :class:`DispatchContext` built from the call;
+    ndim / layout support, dtype restrictions, and the
+    precision-policy facts (which accumulator dtypes the engine
+    honours, how many split-bf16 words it can run) — evaluated
+    against a :class:`DispatchContext` built from the call (the
+    context carries the caller's ``repro.core.precision.MmaPolicy``);
   * a pure-jnp **reference oracle** (what the tests compare every
     engine against);
   * the autotuner hooks: which knobs each engine sweeps
@@ -46,6 +51,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import MmaPolicy, as_policy
+
 # ------------------------------------------------------------- context
 
 
@@ -53,8 +60,9 @@ import jax.numpy as jnp
 class DispatchContext:
     """Trace-time facts one dispatch decision is made from.
 
-    Everything here is static shape/dtype/mesh information, so building
-    a context (and therefore the whole auto path) is jit-safe.
+    Everything here is static shape/dtype/mesh/policy information, so
+    building a context (and therefore the whole auto path) is
+    jit-safe.
     """
     op: str
     shape: tuple
@@ -65,6 +73,7 @@ class DispatchContext:
     mesh_axes: Optional[tuple] = None  # ((name, size), ...) of the live
     #                                    multi-device mesh, mesh order;
     #                                    None on a single device
+    policy: Optional[MmaPolicy] = None  # the call's precision policy
 
     @property
     def ndim(self) -> int:
@@ -124,7 +133,9 @@ class EngineSpec:
     needs_flat: bool = False        # requires effectively-1D layout
     ndim: Optional[int] = None      # exact input rank, None = any
     dtypes: Optional[tuple] = None  # allowed input dtype names
-    sweep: tuple = ()               # of 'chain' / 'block_rows'
+    sweep: tuple = ()               # of 'chain'/'block_rows'/'split_words'
+    max_split_words: int = 1        # split-bf16 words the engine runs
+    accum_dtypes: tuple = ("float32",)  # accumulators it can honour
 
 
 def capability_reason(eng: EngineSpec, ctx: DispatchContext, *,
@@ -149,6 +160,25 @@ def capability_reason(eng: EngineSpec, ctx: DispatchContext, *,
         return f"requires an ndim == {eng.ndim} input"
     if eng.dtypes is not None and ctx.dtype not in eng.dtypes:
         return f"dtype {ctx.dtype} not in {eng.dtypes}"
+    return _policy_reason(eng, ctx.policy)
+
+
+def _policy_reason(eng: EngineSpec,
+                   policy: Optional[MmaPolicy]) -> Optional[str]:
+    """Why ``eng`` cannot honour ``policy`` — or None when it can.
+    The policy-only slice of the capability predicates, shared by the
+    full context check and plan resolvers that have no input array
+    (``local_plan``)."""
+    if policy is None:
+        return None
+    acc = jnp.dtype(policy.accum_dtype).name
+    if acc not in eng.accum_dtypes:
+        return (f"cannot honour accum_dtype={acc} (engine "
+                f"accumulates in {eng.accum_dtypes})")
+    if policy.split_words > eng.max_split_words:
+        return (f"cannot honour split_words={policy.split_words}: "
+                f"the engine runs at most {eng.max_split_words} "
+                f"multiplicand word(s) — use the mma_ec family")
     return None
 
 
@@ -217,7 +247,8 @@ def op_spec(name: str) -> OpSpec:
 
 def build_context(op: str, x, *, axis=None, scan_axis=None,
                   multi_device: Optional[bool] = None,
-                  mesh_axes: Optional[tuple] = None) -> DispatchContext:
+                  mesh_axes: Optional[tuple] = None,
+                  policy: Optional[MmaPolicy] = None) -> DispatchContext:
     if multi_device is None:
         if mesh_axes is None:
             mesh_axes = _live_mesh_axes()
@@ -225,7 +256,7 @@ def build_context(op: str, x, *, axis=None, scan_axis=None,
     return DispatchContext(
         op=op, shape=tuple(x.shape), dtype=jnp.dtype(x.dtype).name,
         multi_device=multi_device, axis=axis, scan_axis=scan_axis,
-        mesh_axes=mesh_axes)
+        mesh_axes=mesh_axes, policy=policy)
 
 
 def legal_engines(spec: OpSpec, ctx: DispatchContext) -> tuple:
@@ -250,7 +281,7 @@ def known_method(op: str, method: str) -> bool:
 
 
 def local_plan(op: str, n: int, dtype, method: str = "auto", *,
-               mesh=None, chain: int = 4):
+               mesh=None, chain: int = 4, precision=None):
     """Resolve a method spelling to an executable plan for a size-n
     problem WITHOUT running it — how the mesh-collective layer
     (``repro.distributed.tc_collectives``) picks the per-device
@@ -258,31 +289,52 @@ def local_plan(op: str, n: int, dtype, method: str = "auto", *,
 
     ``'auto'`` consults the plan registry (mesh-keyed when ``mesh`` is
     given — the plan is tuned for the local shard of the size-n global
-    problem); an explicit spelling resolves through the op's aliases to
-    a one-engine plan with the hooks' default ``chain`` geometry;
-    an engine the op does not declare raises exactly like
-    ``dispatch``.  Capability checking happens at execution
-    (``execute`` validates structurally) — inside a ``shard_map`` body
-    the shard is local, so the environment predicate deliberately does
-    not apply.
+    problem; precision-keyed and error-budget-constrained when
+    ``precision`` carries a policy); an explicit spelling resolves
+    through the op's aliases to a one-engine plan with the hooks'
+    default ``chain`` geometry (and the policy's ``split_words``); an
+    engine the op does not declare raises exactly like ``dispatch``.
+    Capability checking happens at execution (``execute`` validates
+    structurally) — inside a ``shard_map`` body the shard is local, so
+    the environment predicate deliberately does not apply.
     """
     from repro.core import autotune
     spec = op_spec(op)
+    policy = as_policy(precision)
     if method == "auto":
-        return autotune.get_plan(n, dtype, op=op, mesh=mesh)
+        # The autotuner's sweep prunes engines the policy forbids
+        # (candidate_plans), so the resolved plan is always one the
+        # execute-time predicates will accept.
+        return autotune.get_plan(n, dtype, op=op, mesh=mesh,
+                                 policy=policy)
     eng = spec.engine(method)
     if eng is None:
         raise _unknown_method(spec, method)
-    return autotune.ReductionPlan(method=eng.name, chain=chain)
+    reason = _policy_reason(eng, policy)
+    if reason is not None:
+        raise ValueError(
+            f"engine {eng.name!r} cannot serve op {op!r} under this "
+            f"precision policy: {reason}")
+    return autotune.ReductionPlan(method=eng.name, chain=chain,
+                                  **_plan_words(policy))
 
 
-def supported_method(op: str, x, method: str, **op_kwargs) -> bool:
+def _plan_words(policy: Optional[MmaPolicy]) -> dict:
+    """Plan-field overrides an explicit policy pins (split words)."""
+    if policy is None or policy.split_words == 1:
+        return {}
+    return {"split_words": int(policy.split_words)}
+
+
+def supported_method(op: str, x, method: str, *, precision=None,
+                     **op_kwargs) -> bool:
     """Would ``dispatch(op, x, method=...)`` accept this call?
 
     True when ``method`` is ``'auto'`` or resolves (through the op's
-    aliases) to an engine whose capability predicates cover the call.
-    Callers with their own fallback policy (e.g. a hot path that maps
-    an inapplicable ablation engine to the classic baseline instead of
+    aliases) to an engine whose capability predicates cover the call
+    (including the precision policy, when one is given).  Callers with
+    their own fallback policy (e.g. a hot path that maps an
+    inapplicable ablation engine to the classic baseline instead of
     failing the whole forward pass) probe with this before
     dispatching.
     """
@@ -292,12 +344,12 @@ def supported_method(op: str, x, method: str, **op_kwargs) -> bool:
     eng = spec.engine(method)
     if eng is None:
         return False
-    return capability_reason(eng, _context_for(spec, x, op_kwargs)) \
-        is None
+    ctx = _context_for(spec, x, op_kwargs, policy=as_policy(precision))
+    return capability_reason(eng, ctx) is None
 
 
 def resolve_method(op: str, x, method: str, *, fallback: str = "vpu",
-                   **op_kwargs) -> str:
+                   precision=None, **op_kwargs) -> str:
     """``method`` when ``dispatch`` would accept it, else ``fallback``.
 
     The stay-trainable policy for the model/launch layers: a forward
@@ -308,9 +360,25 @@ def resolve_method(op: str, x, method: str, *, fallback: str = "vpu",
     engine here instead of failing at trace time.  The hooks
     themselves stay strict — misrouting is only ever explicit, in one
     place, with the policy named by the ``fallback`` argument.
+
+    A precision policy is never silently dropped: when the fallback
+    itself cannot honour it (e.g. a split-word policy on a per-row
+    statistic no split-capable engine serves), this raises
+    ``ValueError`` naming the conflict here — at the resolve point —
+    instead of deep inside the dispatch the doomed fallback would hit.
     """
-    if supported_method(op, x, method, **op_kwargs):
+    if supported_method(op, x, method, precision=precision,
+                        **op_kwargs):
         return method
+    if not supported_method(op, x, fallback, precision=precision,
+                            **op_kwargs):
+        pol = as_policy(precision)
+        raise ValueError(
+            f"no engine of op {op!r} serves this call: {method!r} and "
+            f"the fallback {fallback!r} both fail the capability "
+            f"predicates"
+            + (f" under precision policy {pol.signature()!r}"
+               if pol is not None else ""))
     return fallback
 
 
@@ -318,25 +386,36 @@ def resolve_method(op: str, x, method: str, *, fallback: str = "vpu",
 
 
 def dispatch(op: str, x, *, method: str = "auto", chain=None,
-             **op_kwargs):
+             precision=None, **op_kwargs):
     """THE dispatch path: every framework hook lands here.
 
     Explicit ``method`` spellings are resolved through the op's alias
     map and capability-checked — an engine the op does not declare, or
-    one whose predicates reject this input/mesh, raises ``ValueError``
-    naming the reason.  ``method='auto'`` consults the autotuner's plan
-    registry under the *legal* engine subset for this call and executes
-    the winner.  ``chain`` (when not None) overrides the plan's chain
-    length on the explicit path, preserving the hooks' R knob — an int
-    is the paper's explicit R, and the string ``'auto'`` resolves the
-    engine-restricted tuned plan (chain AND block geometry) from the
-    registry, exactly like the kernels' per-engine 'auto' spellings.
-    The auto *method* ignores ``chain`` (the plan's tuned geometry
-    wins).
+    one whose predicates reject this input/mesh/policy, raises
+    ``ValueError`` naming the reason.  ``method='auto'`` consults the
+    autotuner's plan registry under the *legal* engine subset for this
+    call and executes the winner.  ``chain`` (when not None) overrides
+    the plan's chain length on the explicit path, preserving the
+    hooks' R knob — an int is the paper's explicit R, and the string
+    ``'auto'`` resolves the engine-restricted tuned plan (chain AND
+    block geometry) from the registry, exactly like the kernels'
+    per-engine 'auto' spellings.  The auto *method* ignores ``chain``
+    (the plan's tuned geometry wins).
+
+    ``precision`` carries the call's ``repro.core.precision.MmaPolicy``
+    (or a bare ``jax.lax.Precision`` for back-compat): it narrows the
+    legal engine set (accumulator dtype, split-word support), keys —
+    and error-budget-constrains — the auto plan, casts the plain
+    engines' multiplicands to ``policy.input_dtype``, and reaches the
+    engine runners (the scan family's MMA einsum precision, the
+    ``mma_ec`` family's split-word count).
     """
     from repro.core import autotune
     spec = op_spec(op)
-    ctx = _context_for(spec, x, op_kwargs)
+    policy = as_policy(precision)
+    ctx = _context_for(spec, x, op_kwargs, policy=policy)
+    if policy is not None:
+        op_kwargs = dict(op_kwargs, policy=policy)
     if method == "auto":
         legal = legal_engines(spec, ctx)
         if not legal:
@@ -345,8 +424,9 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
         restrict = None if legal == spec.engine_names() else legal
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
                                  x.dtype, op=op, engine=restrict,
-                                 mesh=ctx.mesh_axes)
-        return execute(op, x, plan, **op_kwargs)
+                                 mesh=ctx.mesh_axes, policy=policy)
+        return execute(op, _cast_in(x, policy, spec, plan.method),
+                       plan, **op_kwargs)
     eng = spec.engine(method)
     if eng is None:
         raise _unknown_method(spec, method)
@@ -354,14 +434,32 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
     if reason is not None:
         raise ValueError(
             f"engine {eng.name!r} cannot run op {op!r} here: {reason}")
+    x = _cast_in(x, policy, spec, eng.name)
     if chain == "auto":
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
                                  x.dtype, op=op, engine=(eng.name,),
-                                 mesh=ctx.mesh_axes)
+                                 mesh=ctx.mesh_axes, policy=policy)
         return execute(op, x, plan, **op_kwargs)
     overrides = {} if chain is None else {"chain": int(chain)}
+    overrides.update(_plan_words(policy))
     plan = autotune.ReductionPlan(method=eng.name, **overrides)
     return eng.run(x, plan, **op_kwargs)
+
+
+def _cast_in(x, policy: Optional[MmaPolicy], spec: "OpSpec",
+             engine_name: str):
+    """Apply the policy's multiplicand cast for the plain engines.
+
+    The ``mma_ec`` family performs its own split-bf16 decomposition of
+    the full-precision input, so casting first would destroy exactly
+    the bits the split exists to preserve — split-capable engines are
+    exempt."""
+    if policy is None or policy.input_dtype is None:
+        return x
+    eng = spec.engine(engine_name)
+    if eng is not None and eng.max_split_words > 1:
+        return x
+    return policy.cast_in(x)
 
 
 def execute(op: str, x, plan, **op_kwargs):
@@ -385,12 +483,17 @@ def execute(op: str, x, plan, **op_kwargs):
     return eng.run(x, plan, **op_kwargs)
 
 
-def _context_for(spec: OpSpec, x, op_kwargs: dict) -> DispatchContext:
+def _context_for(spec: OpSpec, x, op_kwargs: dict, *,
+                 policy: Optional[MmaPolicy] = None) -> DispatchContext:
+    if policy is None:
+        policy = op_kwargs.get("policy")
     if spec.family == "scan":
         axis = op_kwargs.get("axis", -1)
         scan_axis = axis % max(x.ndim, 1)
-        return build_context(spec.name, x, scan_axis=scan_axis)
-    return build_context(spec.name, x, axis=op_kwargs.get("axis"))
+        return build_context(spec.name, x, scan_axis=scan_axis,
+                             policy=policy)
+    return build_context(spec.name, x, axis=op_kwargs.get("axis"),
+                         policy=policy)
 
 
 # ===================================================== engine runners
@@ -416,7 +519,7 @@ def _reduce_mma(x, plan, *, axis=None, **_):
 def _reduce_chained(x, plan, **_):
     from repro.core import reduction as R
     return R.tc_reduce(x, variant=plan.variant, chain=plan.chain,
-                       m=plan.m)
+                       m=plan.m, mma_fraction=plan.mma_fraction)
 
 
 def _reduce_pallas(x, plan, **_):
@@ -427,6 +530,18 @@ def _reduce_pallas(x, plan, **_):
 
 def _reduce_vpu(x, plan, *, axis=None, **_):
     return jnp.sum(_f32(x), axis=axis)
+
+
+def _reduce_ec(x, plan, **_):
+    from repro.core import reduction as R
+    return R.tc_reduce_ec(x, split_words=plan.split_words,
+                          chain=plan.chain, m=plan.m)
+
+
+def _reduce_pallas_ec(x, plan, **_):
+    from repro.kernels import mma_ec_reduce
+    return mma_ec_reduce(x, split_words=plan.split_words,
+                         chain=plan.chain, block_rows=plan.block_rows)
 
 
 def _sq_mma(x, plan, *, axis=None, **_):
@@ -450,6 +565,23 @@ def _sq_pallas(x, plan, **_):
 def _sq_vpu(x, plan, *, axis=None, **_):
     xf = _f32(x)
     return jnp.sum(xf * xf, axis=axis)
+
+
+def _sq_ec(x, plan, **_):
+    # Square in f32 on the VPU, then compensated split-bf16 reduce —
+    # the squaring rounds once per element (same as every engine); the
+    # accumulation contributes no first-order error.
+    from repro.core import reduction as R
+    xf = _f32(x)
+    return R.tc_reduce_ec(xf * xf, split_words=plan.split_words,
+                          chain=plan.chain, m=plan.m)
+
+
+def _sq_pallas_ec(x, plan, **_):
+    from repro.kernels import mma_ec_squared_sum
+    return mma_ec_squared_sum(x, split_words=plan.split_words,
+                              chain=plan.chain,
+                              block_rows=plan.block_rows)
 
 
 def _masked_mean_with(reduce_run):
@@ -484,12 +616,20 @@ def _counts_vpu(x, plan, **_):
 # ---- scan family
 
 
-def _scan_chained(x, plan, *, axis=-1, inclusive=True, precision=None,
+def _scan_chained(x, plan, *, axis=-1, inclusive=True, policy=None,
                   **_):
     from repro.core import scan as S
+    lax_prec = None if policy is None else policy.lax_precision()
     return S.tc_scan(x, axis=axis, inclusive=inclusive,
                      variant=plan.variant, chain=plan.chain, m=plan.m,
-                     precision=precision)
+                     precision=lax_prec)
+
+
+def _scan_ec(x, plan, *, axis=-1, inclusive=True, **_):
+    from repro.core import scan as S
+    return S.tc_scan_ec(x, axis=axis, inclusive=inclusive,
+                        split_words=plan.split_words,
+                        chain=plan.chain, m=plan.m)
 
 
 def _scan_pallas(x, plan, *, inclusive=True, **_):
@@ -590,14 +730,24 @@ def _measure_expert_counts(n, dtype, rng):
 #   mma_chained  pure-JAX chained core.  Flatten-and-pad for reductions
 #                (single-device only, no axis subsets); reshapes ONLY
 #                the scan axis for scans (distribution-safe, batched).
+#   mma_ec       compensated split-bf16 chains (pure JAX): 2-3 bf16
+#                words per f32 multiplicand, TwoSum-combined f32
+#                partials.  Single-device, flatten-only (reduce) /
+#                scan-axis-only (scan); the only family honouring
+#                policy split_words > 1.
 #   pallas       hand-tiled kernel: single-device, flatten-only.
+#   pallas_ec    hand-tiled twin of mma_ec (Kahan VMEM accumulators).
 #   vpu          classic baseline: safe everywhere.
 
 _REDUCE_ENGINES = (
     EngineSpec("mma", _reduce_mma, multi_device_safe=True,
                axis_subsets=True),
     EngineSpec("mma_chained", _reduce_chained, sweep=("chain",)),
+    EngineSpec("mma_ec", _reduce_ec, max_split_words=3,
+               sweep=("chain", "split_words")),
     EngineSpec("pallas", _reduce_pallas, sweep=("chain", "block_rows")),
+    EngineSpec("pallas_ec", _reduce_pallas_ec, max_split_words=3,
+               sweep=("chain", "block_rows", "split_words")),
     EngineSpec("vpu", _reduce_vpu, multi_device_safe=True,
                axis_subsets=True),
 )
@@ -612,7 +762,11 @@ register(OpSpec(
         EngineSpec("mma", _sq_mma, multi_device_safe=True,
                    axis_subsets=True),
         EngineSpec("mma_chained", _sq_chained, sweep=("chain",)),
+        EngineSpec("mma_ec", _sq_ec, max_split_words=3,
+                   sweep=("chain", "split_words")),
         EngineSpec("pallas", _sq_pallas, sweep=("chain", "block_rows")),
+        EngineSpec("pallas_ec", _sq_pallas_ec, max_split_words=3,
+                   sweep=("chain", "block_rows", "split_words")),
         EngineSpec("vpu", _sq_vpu, multi_device_safe=True,
                    axis_subsets=True),
     ),
@@ -642,6 +796,8 @@ register(OpSpec(
 _SCAN_ENGINES = (
     EngineSpec("mma_chained", _scan_chained, multi_device_safe=True,
                sweep=("chain",)),
+    EngineSpec("mma_ec", _scan_ec, max_split_words=3,
+               sweep=("chain", "split_words")),
     EngineSpec("pallas", _scan_pallas, needs_flat=True,
                sweep=("chain", "block_rows")),
     EngineSpec("vpu", _scan_vpu, multi_device_safe=True),

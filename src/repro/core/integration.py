@@ -26,7 +26,16 @@ ladders here (``scripts/check.sh`` enforces that structurally).
 
 An engine an op does not declare — or one whose predicates reject the
 call (axis-subset reductions on a flatten-only engine, Pallas under a
-multi-device mesh, …) — raises ``ValueError`` naming the reason.
+multi-device mesh, a split-word policy on a plain engine, …) — raises
+``ValueError`` naming the reason.
+
+Every hook takes ``precision``: ``None`` (the default — current
+behaviour, no policy), a ``repro.core.precision.MmaPolicy`` (the
+subsystem's policy carrier: multiplicand dtype, accumulator dtype,
+split-bf16 word count, error budget), or — backward compatibly — a
+bare ``jax.lax.Precision``.  The policy restricts the legal engine
+set, keys (and error-budget-constrains) auto plans, and reaches the
+engine runners; see docs/precision.md.
 """
 
 from __future__ import annotations
@@ -40,7 +49,8 @@ import jax.numpy as jnp
 
 from repro.core import dispatch
 
-Method = Literal["auto", "mma", "mma_chained", "pallas", "vpu"]
+Method = Literal["auto", "mma", "mma_chained", "mma_ec", "pallas",
+                "pallas_ec", "vpu"]
 
 
 def _norm_axes(axis, ndim: int) -> Optional[tuple]:
@@ -71,7 +81,8 @@ def _keepdims(out, axes: Optional[tuple], ndim: int, keepdims: bool):
 
 
 def reduce_sum(x, *, axis=None, keepdims: bool = False,
-               method: Method = "mma", chain: int = 4) -> jax.Array:
+               method: Method = "mma", chain: int = 4,
+               precision=None) -> jax.Array:
     """Sum over ``axis`` (None = all elements), f32.
 
     'auto' selects a cached ReductionPlan (engine + chain + block_rows)
@@ -96,12 +107,12 @@ def reduce_sum(x, *, axis=None, keepdims: bool = False,
     if axes == ():                  # reduce over no axes (jnp semantics)
         return x.astype(jnp.float32)
     out = dispatch.dispatch("reduce_sum", x, method=method, chain=chain,
-                            axis=axes)
+                            precision=precision, axis=axes)
     return _keepdims(out, axes, x.ndim, keepdims)
 
 
 def reduce_mean(x, *, axis=None, keepdims: bool = False,
-                method: Method = "mma") -> jax.Array:
+                method: Method = "mma", precision=None) -> jax.Array:
     """Mean over ``axis`` (None = all elements), f32.
 
     >>> import numpy as np
@@ -112,11 +123,11 @@ def reduce_mean(x, *, axis=None, keepdims: bool = False,
     count = x.size if axes is None \
         else math.prod(x.shape[a] for a in axes)
     return reduce_sum(x, axis=axis, keepdims=keepdims,
-                      method=method) / count
+                      method=method, precision=precision) / count
 
 
 def masked_mean(values, mask, *, method: Method = "mma",
-                chain: int = 4) -> jax.Array:
+                chain: int = 4, precision=None) -> jax.Array:
     """mean of values where mask==1 — the token-loss reduction.
 
     In 'mma' form the numerator is a *single* contraction <values, mask>
@@ -134,11 +145,13 @@ def masked_mean(values, mask, *, method: Method = "mma",
     """
     mask = mask.astype(values.dtype)
     return dispatch.dispatch("masked_mean", values, method=method,
-                             chain=chain, mask=mask)
+                             chain=chain, precision=precision,
+                             mask=mask)
 
 
 def squared_sum(x, *, axis=None, keepdims: bool = False,
-                method: Method = "mma", chain: int = 4) -> jax.Array:
+                method: Method = "mma", chain: int = 4,
+                precision=None) -> jax.Array:
     """sum(x^2) over ``axis`` (None = all) — grad-norm building block.
 
     'mma' form: <x, x> as one dot_general — the reduction rides the MXU
@@ -151,17 +164,20 @@ def squared_sum(x, *, axis=None, keepdims: bool = False,
         xf = x.astype(jnp.float32)
         return xf * xf
     out = dispatch.dispatch("squared_sum", x, method=method,
-                            chain=chain, axis=axes)
+                            chain=chain, precision=precision,
+                            axis=axes)
     return _keepdims(out, axes, x.ndim, keepdims)
 
 
-def global_norm(tree, *, method: Method = "mma") -> jax.Array:
+def global_norm(tree, *, method: Method = "mma",
+                precision=None) -> jax.Array:
     """L2 norm over a pytree (gradient clipping / monitoring).  'auto'
     tunes per leaf — big embedding tables and small biases get their own
     plans."""
     leaves = jax.tree_util.tree_leaves(tree)
     total = functools.reduce(
-        jnp.add, [squared_sum(l, method=method) for l in leaves])
+        jnp.add, [squared_sum(l, method=method, precision=precision)
+                  for l in leaves])
     return jnp.sqrt(total)
 
 
@@ -177,8 +193,11 @@ def cumsum(x, *, axis: int = -1, inclusive: bool = True,
     ``jnp.cumsum`` baseline; 'auto' dispatches the plan the registry
     tuned for (op='scan', n, dtype, backend) over the legal engines.
     ``inclusive=False`` gives the exclusive scan (leading zero).
-    ``precision`` reaches the MMA engines (pin
-    ``jax.lax.Precision.HIGHEST`` for integer-exact prefixes on TPU).
+    ``precision`` accepts an ``repro.core.precision.MmaPolicy`` (or a
+    bare lax precision): pin ``repro.core.precision.EXACT_OFFSETS``
+    for integer-exact prefixes on TPU (the MoE dispatch path), or a
+    split-word / budget policy to route through the compensated
+    ``mma_ec`` scan.
     """
     return dispatch.dispatch("scan", x, method=method, chain=chain,
                              axis=axis, inclusive=inclusive,
@@ -187,18 +206,19 @@ def cumsum(x, *, axis: int = -1, inclusive: bool = True,
 
 def masked_cumsum(values, mask, *, axis: int = -1,
                   inclusive: bool = True,
-                  method: Method = "mma", chain: int = 4) -> jax.Array:
+                  method: Method = "mma", chain: int = 4,
+                  precision=None) -> jax.Array:
     """Prefix sum of ``values`` where ``mask == 1`` (masked-out
     positions contribute 0 but still receive the running prefix) — the
     packed-position / token-budget scan.  f32, same shape."""
     masked = values.astype(jnp.float32) * mask.astype(jnp.float32)
     return dispatch.dispatch("masked_cumsum", masked, method=method,
                              chain=chain, axis=axis,
-                             inclusive=inclusive)
+                             inclusive=inclusive, precision=precision)
 
 
 def segment_sum(values, segment_ids, num_segments: int, *,
-                method: Method = "mma") -> jax.Array:
+                method: Method = "mma", precision=None) -> jax.Array:
     """Segmented sum: out[s] = sum of values where segment_ids == s.
 
     'mma' contracts against the one-hot segment matrix (block-diagonal
@@ -208,11 +228,13 @@ def segment_sum(values, segment_ids, num_segments: int, *,
     op='segment_sum'.  Empty segments are 0.  (num_segments,) f32.
     """
     return dispatch.dispatch("segment_sum", values, method=method,
+                             precision=precision,
                              segment_ids=segment_ids,
                              num_segments=num_segments)
 
 
-def expert_counts(router_probs_onehot, *, method: Method = "mma"):
+def expert_counts(router_probs_onehot, *, method: Method = "mma",
+                  precision=None):
     """Tokens-per-expert from a (tokens, experts) one-hot/weight matrix:
     counts = [1]_{1 x T} x onehot — a single ones-MMA (load-balance
     loss).  A row-wise op: its registry entry declares exactly the
@@ -220,4 +242,4 @@ def expert_counts(router_probs_onehot, *, method: Method = "mma"):
     ``ValueError`` instead of silently misrouting.
     """
     return dispatch.dispatch("expert_counts", router_probs_onehot,
-                             method=method)
+                             method=method, precision=precision)

@@ -1,34 +1,241 @@
-"""Mixed-precision policy + numerical-error measurement (paper §5.4, §6).
+"""The precision-policy subsystem: one carrier for every dtype /
+accuracy decision the MMA engines make (paper §5.4, §6).
 
-GPU tensor cores compute A x B in FP16 with FP32 accumulate; the TPU MXU
-computes bf16 x bf16 with FP32 accumulate.  ``MmaPolicy`` captures that
-choice, and ``percent_error`` reproduces the paper's metric: % error of
-a reduction vs an FP64 CPU oracle, for normal and uniform inputs.
+GPU tensor cores compute A x B in FP16 with FP32 accumulate; the TPU
+MXU computes bf16 x bf16 with FP32 accumulate.  :class:`MmaPolicy`
+captures that choice — input (multiplicand) dtype, accumulator dtype,
+how many bf16 words an f32 multiplicand is split into, and the error
+budget a ``method='auto'`` plan must respect — and this module owns
+every numeric that feeds it:
 
-bf16 has FP32's exponent range, so the paper's FP16 *overflow* failures
-(CUB-half / recurrence variant on uniform [0,1]) become *precision*
-degradation here — measured, not assumed (see DESIGN.md §8).
+  * ``ACCUM_DTYPE`` — THE f32-accumulator contract.  Every
+    ``preferred_element_type=`` in ``src/`` must reference this (or a
+    policy's ``accum_dtype``); ``scripts/check.sh`` greps for raw
+    ``preferred_element_type=jnp.*`` / ``Precision.HIGHEST`` pins
+    outside this module and fails the build on a hit.
+  * the **split-bf16 decomposition** (``split_f32_words``): an f32
+    value is the exact sum of 3 round-to-nearest bf16 words (hi +
+    mid + lo; 2 words keep ~16 of the 24 significand bits), following
+    Markidis et al. (arXiv:1803.04014) residual splitting and the
+    multi-word tensor-core arithmetic of arXiv:2607.06881.  The
+    ``mma_ec`` engines run one MMA chain per word.
+  * **compensated accumulation** (``two_sum`` / ``compensated_sum``):
+    the error-free TwoSum transform and the pairwise compensated tree
+    the ``mma_ec`` engines use to combine f32 MMA partials, so the
+    combine stage contributes (second-order) ~eps^2 error instead of
+    eps * log n.
+  * the paper's **fp64-oracle harness** (``percent_error`` /
+    ``error_sweep``): % error of a reduction vs an FP64 CPU oracle on
+    the paper's two input classes (Figs. 7/8 bottom rows).  The
+    error-budget-aware autotuner scores candidates against it.
+
+bf16 has FP32's exponent range, so the paper's FP16 *overflow*
+failures (CUB-half / recurrence variant on uniform [0,1]) become
+*precision* degradation here — measured, not assumed (see
+docs/design-notes.md §8).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable
+import dataclasses
+from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+__all__ = [
+    "ACCUM_DTYPE",
+    "EXACT_OFFSETS",
+    "MmaPolicy",
+    "as_policy",
+    "compensated_sum",
+    "error_sweep",
+    "fp64_oracle",
+    "normal_input",
+    "percent_error",
+    "split_f32_words",
+    "two_sum",
+    "uniform_input",
+]
 
-@dataclass(frozen=True)
+# The paper's FP32 C/D accumulators: the one accumulator-dtype pin in
+# src/.  Kernels and cores import this instead of writing
+# ``preferred_element_type=jnp.float32`` (the check.sh guard).
+ACCUM_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
 class MmaPolicy:
-    """Dtype policy for MMA-encoded reductions."""
-    input_dtype: jnp.dtype = jnp.bfloat16   # paper: fp16 multiplicands
-    accum_dtype: jnp.dtype = jnp.float32    # paper: fp32 C/D accumulators
-    keep_f32_partials: bool = True          # paper single-pass: True,
-                                            # recurrence: False
+    """Dtype/accuracy policy for MMA-encoded reductions and scans.
+
+    One frozen (hashable, trace-time) value threaded from the
+    ``precision=`` kwarg of every ``repro.core.integration`` hook down
+    through ``repro.core.dispatch`` to the engines and the autotuner.
+
+    ``input_dtype``        multiplicand dtype the plain engines cast
+                           to before the MMA (``None`` = keep the
+                           caller's dtype — the default).  The paper's
+                           fp16-input ablation is
+                           ``MmaPolicy(input_dtype=jnp.bfloat16)``.
+    ``accum_dtype``        the C/D accumulator dtype.  The engine
+                           capability predicates only admit engines
+                           that honour it (everything in this repo
+                           accumulates in f32 — ``ACCUM_DTYPE``).
+    ``split_words``        how many bf16 words an f32 multiplicand is
+                           split into for the compensated ``mma_ec``
+                           engines: 1 = no split (any engine), 2 =
+                           hi+lo (~16 bits), 3 = hi+mid+lo (exact f32
+                           reconstruction).  Values > 1 are a
+                           capability predicate: only the ``mma_ec``
+                           family can honour them.
+    ``error_budget_pct``   percent-error ceiling (vs the fp64 oracle)
+                           a ``method='auto'`` plan must stay under:
+                           the autotuner picks the *fastest candidate
+                           that meets the budget* instead of the
+                           fastest outright (``repro.core.autotune``).
+    ``mma_precision``      ``'highest'`` pins ``jax.lax.Precision``
+                           for the MMA einsums — multiplicands survive
+                           MXU/TF32 truncation exactly (the MoE
+                           integer-offset path); ``None`` is the
+                           paper's truncating default.
+
+    >>> MmaPolicy().signature()
+    'any.float32'
+    >>> MmaPolicy(split_words=2, error_budget_pct=1e-4).signature()
+    'any.float32.w2.b0.0001'
+    """
+
+    input_dtype: Optional[object] = None
+    accum_dtype: object = ACCUM_DTYPE
+    split_words: int = 1
+    error_budget_pct: Optional[float] = None
+    mma_precision: Optional[str] = None
 
     def cast_in(self, x):
+        """Cast to the policy's multiplicand dtype (no-op when None)."""
+        if self.input_dtype is None:
+            return x
         return x.astype(self.input_dtype)
+
+    def lax_precision(self):
+        """The ``jax.lax.Precision`` this policy pins — or None."""
+        if self.mma_precision is None:
+            return None
+        return {
+            "highest": jax.lax.Precision.HIGHEST,
+            "high": jax.lax.Precision.HIGH,
+            "default": jax.lax.Precision.DEFAULT,
+        }[self.mma_precision]
+
+    def signature(self) -> str:
+        """Compact plan-key component (``|prec:<sig>`` suffix grammar,
+        see docs/precision.md): ``<in>.<acc>[.w<N>][.b<budget>][.p<P>]``
+        where ``<in>`` is ``any`` for a None input dtype."""
+        in_name = "any" if self.input_dtype is None \
+            else jnp.dtype(self.input_dtype).name
+        parts = [in_name, jnp.dtype(self.accum_dtype).name]
+        if self.split_words != 1:
+            parts.append(f"w{int(self.split_words)}")
+        if self.error_budget_pct is not None:
+            parts.append(f"b{self.error_budget_pct:g}")
+        if self.mma_precision is not None:
+            parts.append(f"p{self.mma_precision}")
+        return ".".join(parts)
+
+
+# Named policy for integer-exact prefix offsets (the MoE dispatch
+# path): f32 multiplicands pinned past the MXU/TF32 truncation, exact
+# below 2^24 under the f32-accumulator contract.
+EXACT_OFFSETS = MmaPolicy(input_dtype=jnp.float32,
+                          mma_precision="highest")
+
+
+def as_policy(precision) -> Optional[MmaPolicy]:
+    """Normalise a hook's ``precision=`` argument to an ``MmaPolicy``.
+
+    Accepts ``None`` (no policy), an ``MmaPolicy``, or — for backward
+    compatibility with call sites that passed a matmul precision
+    directly — a ``jax.lax.Precision`` / its string spelling, which
+    wraps into a policy that pins only ``mma_precision``.
+    """
+    if precision is None or isinstance(precision, MmaPolicy):
+        return precision
+    if isinstance(precision, jax.lax.Precision):
+        name = precision.name.lower()
+    elif isinstance(precision, str):
+        name = precision.lower()
+    else:
+        raise TypeError(
+            f"precision must be an MmaPolicy, jax.lax.Precision, str "
+            f"or None — got {type(precision).__name__}")
+    return MmaPolicy(mma_precision=name)
+
+
+# ------------------------------------------------ split-bf16 words
+
+
+def split_f32_words(x, words: int):
+    """Split f32 values into ``words`` bf16 words summing back to x.
+
+    Round-to-nearest residual splitting (Markidis et al.):
+    ``hi = bf16(x)``, ``mid = bf16(x - hi)``, ``lo = bf16(x - hi -
+    mid)`` — every subtraction is exact in f32 (Sterbenz), so with 3
+    words the reconstruction ``hi + mid + lo`` recovers x to within
+    1 ulp (exactly, for normal values: 3 x 8 significand bits cover
+    f32's 24).  With 2 words ~16 bits survive (relative residual
+    <= 2^-16).  Returns a list of bf16 arrays, most significant first.
+    """
+    if words < 1:
+        raise ValueError(f"split_f32_words needs words >= 1, got {words}")
+    r = x.astype(jnp.float32)
+    parts = []
+    for _ in range(words - 1):
+        hi = r.astype(jnp.bfloat16)
+        parts.append(hi)
+        r = r - hi.astype(jnp.float32)
+    parts.append(r.astype(jnp.bfloat16))
+    return parts
+
+
+# ------------------------------------------- compensated accumulation
+
+
+def two_sum(a, b):
+    """Error-free transform: ``s, e`` with ``s = fl(a + b)`` and
+    ``s + e == a + b`` exactly (Knuth TwoSum, branch-free — safe for
+    any magnitude ordering, vectorises on the VPU)."""
+    s = a + b
+    bv = s - a
+    av = s - bv
+    return s, (a - av) + (b - bv)
+
+
+def compensated_sum(v) -> jax.Array:
+    """Sum a vector of f32 partials with a pairwise TwoSum tree.
+
+    The combine stage of the ``mma_ec`` engines: each halving level
+    runs one vectorised TwoSum and accumulates the exact per-pair
+    errors, so the returned scalar is the correctly-rounded f32 sum of
+    the partials up to second-order (~eps^2) terms — independent of
+    the partial count.  Trace-time loop: log2(len) levels.
+    """
+    v = jnp.ravel(v).astype(ACCUM_DTYPE)
+    if v.shape[0] == 0:
+        return jnp.zeros((), ACCUM_DTYPE)
+    err = jnp.zeros((), ACCUM_DTYPE)
+    while v.shape[0] > 1:
+        if v.shape[0] % 2:
+            v = jnp.pad(v, (0, 1))
+        s, e = two_sum(v[0::2], v[1::2])
+        # second-order: the pair errors are ~eps * |pair|, so a plain
+        # sum of them leaves only ~eps^2 behind.
+        err = err + jnp.sum(e)
+        v = s
+    return v[0] + err
+
+
+# ---------------------------------------------- fp64-oracle harness
 
 
 # The paper's two input classes (§5.4): very different error behaviour.
@@ -42,14 +249,14 @@ def uniform_input(n: int, seed: int = 0) -> np.ndarray:
 
 def fp64_oracle(x: np.ndarray) -> float:
     """The paper's reference: CPU reduction in double precision."""
-    return float(np.sum(x.astype(np.float64)))
+    return float(np.sum(np.asarray(x).astype(np.float64)))
 
 
 def percent_error(measured: float, x: np.ndarray) -> float:
     """% error vs the FP64 oracle (paper Figs. 7/8 bottom rows)."""
     ref = fp64_oracle(x)
     denom = abs(ref) if ref != 0.0 else 1.0
-    return 100.0 * abs(measured - ref) / denom
+    return 100.0 * abs(float(measured) - ref) / denom
 
 
 def error_sweep(reduce_fn: Callable[[np.ndarray], float],

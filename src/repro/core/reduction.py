@@ -29,6 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.precision import (ACCUM_DTYPE, compensated_sum,
+                                  split_f32_words)
+
 DEFAULT_M = 128  # MXU tile (the paper's m; m=4 at GPU hw level, 16 in wmma)
 
 Variant = Literal["single_pass", "recurrence", "split"]
@@ -46,7 +49,7 @@ def _as_groups(x, chain: int, m: int):
     return flat.reshape(g, chain, m, m)
 
 
-def _mma_chain(groups, *, accum_dtype=jnp.float32):
+def _mma_chain(groups, *, accum_dtype=ACCUM_DTYPE):
     """C_g = sum_r [1]_{1xm} x M_{g,r}; returns (G, m) f32 row-accumulators.
 
     The ones-row matmul is expressed as a dot_general so XLA lowers it to
@@ -73,7 +76,7 @@ def _mma_collapse(acc, *, cast_to=None):
     out = lax.dot_general(
         a, ones_col,
         dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=ACCUM_DTYPE,
     )
     return out[:, 0]
 
@@ -149,6 +152,45 @@ def _tc_reduce_impl(x, *, variant: Variant, chain: int, m: int,
     raise ValueError(f"unknown variant: {variant!r}")
 
 
+def tc_reduce_ec(x, *, split_words: int = 2, chain: int | str = 2,
+                 m: int = DEFAULT_M) -> jax.Array:
+    """Error-compensated reduction: split-bf16 MMA chains + TwoSum
+    combine.  Returns an f32 scalar at (near) correctly-rounded
+    accuracy.
+
+    The ``mma_ec`` engine family (paper §5.4 extended per Markidis et
+    al., arXiv:1803.04014): each f32 multiplicand is split into
+    ``split_words`` bf16 words (``repro.core.precision.
+    split_f32_words`` — 3 words reconstruct f32 exactly, 2 keep ~16
+    bits), one ones-MMA chain runs per word with f32 accumulators
+    exactly like ``tc_reduce``, and the per-lane f32 partials of every
+    word are folded with the pairwise-TwoSum compensated tree
+    (``repro.core.precision.compensated_sum``) instead of the plain
+    final MMA — so the combine stage is error-free to first order and
+    the result is the correctly-rounded f32 sum up to the words'
+    representation residual.  ``chain='auto'`` resolves the geometry
+    from the autotuner's plan registry (engine ``'mma_ec'``).
+    """
+    if chain == "auto":
+        from repro.core import autotune
+        chain = autotune.get_plan(x.size, x.dtype, op="reduce_sum",
+                                  engine="mma_ec").chain
+    return _tc_reduce_ec_impl(x, split_words=int(split_words),
+                              chain=int(chain), m=m)
+
+
+@functools.partial(jax.jit, static_argnames=("split_words", "chain", "m"))
+def _tc_reduce_ec_impl(x, *, split_words: int, chain: int,
+                       m: int) -> jax.Array:
+    words = split_f32_words(x, split_words)
+    # One MMA chain per word; keep the (G, m) f32 lane partials — the
+    # final transposed MMA is replaced by the compensated combine, so
+    # no partial is ever re-rounded through a second contraction.
+    lanes = [jnp.ravel(_mma_chain(_as_groups(w, chain, m)))
+             for w in words]
+    return compensated_sum(jnp.concatenate(lanes))
+
+
 def tc_contract(a, b) -> jax.Array:
     """Full contraction <a, b> as one dot_general (f32 accumulation).
 
@@ -162,7 +204,7 @@ def tc_contract(a, b) -> jax.Array:
     dims = tuple(range(a.ndim))
     return lax.dot_general(
         a, b, dimension_numbers=((dims, dims), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=ACCUM_DTYPE)
 
 
 def tc_reduce_axes(x, axes: tuple, *, b=None) -> jax.Array:
@@ -190,7 +232,7 @@ def tc_reduce_axes(x, axes: tuple, *, b=None) -> jax.Array:
     return lax.dot_general(
         x, b,
         dimension_numbers=((axes, axes), (batch, batch)),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=ACCUM_DTYPE)
 
 
 @jax.jit
@@ -209,7 +251,7 @@ def tc_reduce_lastdim(x) -> jax.Array:
     return lax.dot_general(
         x, ones,
         dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=ACCUM_DTYPE)
 
 
 @functools.partial(jax.jit, static_argnames=("chain", "m"))
@@ -227,6 +269,6 @@ def tc_reduce_rows(x2d, *, chain: int = 1, m: int = DEFAULT_M) -> jax.Array:
     out = lax.dot_general(
         x2d, ones_col,
         dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=ACCUM_DTYPE,
     )
     return out[:, 0]

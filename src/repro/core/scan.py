@@ -43,6 +43,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import (ACCUM_DTYPE, split_f32_words,
+                                  two_sum)
 from repro.core.reduction import DEFAULT_M, Variant
 
 # Floor for log-space inputs: finite stand-in for log(0).  Any prefix
@@ -81,9 +83,10 @@ def tc_scan(x, *, axis: int = -1, inclusive: bool = True,
     ``precision`` is forwarded to the MMA einsums.  The default follows
     the paper's mixed-precision contract (low-precision multiplicands,
     f32 accumulators — on TPU the MXU truncates f32 operands to bf16);
-    pass ``jax.lax.Precision.HIGHEST`` when the scanned values must
-    survive the multiplicand rounding, e.g. integer-exact prefix
-    offsets (the MoE dispatch path).
+    pass the lax precision of a pinned policy (e.g.
+    ``repro.core.precision.EXACT_OFFSETS.lax_precision()``) when the
+    scanned values must survive the multiplicand rounding, e.g.
+    integer-exact prefix offsets (the MoE dispatch path).
 
     The scan axis is tiled into groups of ``chain`` rows of ``m``
     elements; every other axis is a batch axis and is left exactly as
@@ -136,14 +139,14 @@ def _tc_scan_impl(x, *, axis: int, inclusive: bool, variant: Variant,
     # P = X x U_m: per-row inclusive prefix, one triangular MMA per row.
     u_m = _triu_ones(m, tiles.dtype)
     p = jnp.einsum("...i,ij->...j", tiles, u_m,
-                   preferred_element_type=jnp.float32,
+                   preferred_element_type=ACCUM_DTYPE,
                    precision=precision)
 
     # Intra-group carries: strict-upper triangular MMA over row totals.
     t = p[..., -1]                                    # (..., G, chain)
     u_c = _triu_ones(chain, jnp.float32, strict=True)
     c = jnp.einsum("...i,ij->...j", t, u_c,
-                   preferred_element_type=jnp.float32,
+                   preferred_element_type=ACCUM_DTYPE,
                    precision=precision)
 
     # Exclusive carry across groups.
@@ -164,6 +167,49 @@ def _tc_scan_impl(x, *, axis: int, inclusive: bool, variant: Variant,
     if not inclusive:
         out = _shift_exclusive(out)
     return jnp.moveaxis(out, -1, axis)
+
+
+def tc_scan_ec(x, *, axis: int = -1, inclusive: bool = True,
+               split_words: int = 2, chain: int | str = 2,
+               m: int = DEFAULT_M) -> jax.Array:
+    """Error-compensated prefix sum: split-bf16 triangular MMAs whose
+    per-word f32 prefixes recombine through TwoSum.  Returns f32.
+
+    The scan-family member of the ``mma_ec`` engine family
+    (``repro.core.reduction.tc_reduce_ec`` is the reduce twin): the
+    input is split into ``split_words`` bf16 words
+    (``repro.core.precision.split_f32_words`` — 3 words reconstruct
+    f32 exactly), each word runs one chained triangular-MMA scan with
+    f32 accumulators (``tc_scan``), and the per-position word prefixes
+    are folded with a TwoSum cascade so the recombination adds no
+    first-order rounding.  On MXUs that truncate f32 multiplicands to
+    bf16 this recovers (near-)f32 prefix accuracy from bf16 MMAs.
+    ``chain='auto'`` resolves geometry from the plan registry (engine
+    ``'mma_ec'``, op ``'scan'``).
+    """
+    if chain == "auto":
+        from repro.core import autotune
+        chain = autotune.get_plan(x.shape[axis], x.dtype, op="scan",
+                                  engine="mma_ec").chain
+    return _tc_scan_ec_impl(x, axis=axis, inclusive=inclusive,
+                            split_words=int(split_words),
+                            chain=int(chain), m=m)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "axis", "inclusive", "split_words", "chain", "m"))
+def _tc_scan_ec_impl(x, *, axis: int, inclusive: bool,
+                     split_words: int, chain: int, m: int) -> jax.Array:
+    words = split_f32_words(x, split_words)
+    scans = [_tc_scan_impl(w, axis=axis, inclusive=inclusive,
+                           variant="single_pass", chain=chain, m=m)
+             for w in words]
+    out = scans[0]
+    err = jnp.zeros_like(out)
+    for nxt in scans[1:]:
+        out, e = two_sum(out, nxt)
+        err = err + e
+    return out + err
 
 
 def tc_cumprod(x, *, axis: int = -1, inclusive: bool = True,
@@ -229,7 +275,7 @@ def tc_linear_recurrence(log_a, b, h0, *, chunk: int = 16):
         l_mat = jnp.exp(jnp.where(tri[None, None, :, :, None], diff,
                                   _LOG_FLOOR))
         return jnp.einsum("bntsw,bnsw->bntw", l_mat, bf_,
-                          preferred_element_type=jnp.float32)
+                          preferred_element_type=ACCUM_DTYPE)
 
     # The densified (B, nc, c, c, W) decay matrix is chunk x the input
     # size — rematerialise it in the backward pass instead of saving
@@ -291,7 +337,7 @@ def tc_segment_reduce(values, segment_ids, num_segments: int, *,
         mask = (i[:, None] == seg_iota[None, :]).astype(v.dtype)
         return jax.lax.dot_general(
             v, mask, dimension_numbers=(((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+            preferred_element_type=ACCUM_DTYPE)
 
     nb = int(math.ceil(n / block))
     if nb == 1:

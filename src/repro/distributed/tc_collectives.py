@@ -55,6 +55,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import autotune, dispatch
+from repro.core import precision as precision_mod
 from repro.distributed import sharding as shd
 from repro.distributed.collectives import mesh_psum
 
@@ -85,7 +86,7 @@ def shardable_axes(mesh, dim: int) -> tuple:
     return tuple(chosen)
 
 
-def _local_reduce(op: str, x, method: str, mesh=None):
+def _local_reduce(op: str, x, method: str, mesh=None, precision=None):
     """The GSPMD / no-collective path: plain dispatch, with the
     stay-trainable resolve policy for engines this call cannot serve
     (an un-shardable leaf under a live mesh still sees the strict pjit
@@ -97,18 +98,20 @@ def _local_reduce(op: str, x, method: str, mesh=None):
     against the mesh actually asked for."""
     if mesh is not None and shd.current_mesh() is not mesh:
         with shd.axis_rules(mesh):
-            return _local_reduce(op, x, method)
+            return _local_reduce(op, x, method, precision=precision)
     if dispatch.known_method(op, method):
-        method = dispatch.resolve_method(op, x, method, fallback="mma")
+        method = dispatch.resolve_method(op, x, method, fallback="mma",
+                                         precision=precision)
     # chain=4 matches the hooks' explicit-engine default AND the
     # shard_map path's local_plan, so the fallback is bit-exact with
     # both (the auto path ignores chain; its plan geometry wins).
-    return dispatch.dispatch(op, x, method=method, chain=4)
+    return dispatch.dispatch(op, x, method=method, chain=4,
+                             precision=precision)
 
 
 def tc_psum(x, *, mesh=None, method: str = "auto",
-            op: str = "reduce_sum",
-            via: str = "shard_map") -> jax.Array:
+            op: str = "reduce_sum", via: str = "shard_map",
+            precision=None) -> jax.Array:
     """Global reduction of every element of ``x`` across the mesh —
     one replicated f32 scalar.
 
@@ -133,7 +136,14 @@ def tc_psum(x, *, mesh=None, method: str = "auto",
 
     ``op`` selects any scalar reduce-family op (``reduce_sum`` or
     ``squared_sum``); ``mesh`` defaults to the ambient
-    sharding-context mesh.
+    sharding-context mesh.  ``precision`` carries the device-level
+    ``repro.core.precision.MmaPolicy``: the per-device partial plan is
+    precision-keyed (and error-budget-constrained under
+    ``method='auto'``), the policy's multiplicand cast applies to the
+    local shard, and a split-word policy routes the partial through
+    the compensated ``mma_ec`` family — the paper's
+    one-f32-partial-per-device contract with a per-device error
+    budget.
 
     Falls back to the plain dispatch path — exact, no shard_map —
     when there is no >1-device mesh, the input is 0-d, or its leading
@@ -149,24 +159,31 @@ def tc_psum(x, *, mesh=None, method: str = "auto",
         raise ValueError(f"unknown via: {via!r} "
                          f"(accepted: 'shard_map', 'gspmd')")
     mesh = _ambient_mesh(mesh)
+    policy = precision_mod.as_policy(precision)
     if via == "gspmd":
-        return _local_reduce(op, x, method, mesh)
+        return _local_reduce(op, x, method, mesh, precision=policy)
     if autotune.mesh_device_count(mesh) <= 1 or x.ndim == 0 \
             or x.size == 0:
-        return _local_reduce(op, x, method)
+        return _local_reduce(op, x, method, precision=policy)
     names = shardable_axes(mesh, x.shape[0])
     if not names:
-        return _local_reduce(op, x, method)
+        return _local_reduce(op, x, method, precision=policy)
     # Key (and tune) the plan by the axes actually sharded over — a
     # leaf that splits over data but not model holds an n/4 shard on a
     # 4x2 mesh, not n/8, and must not share the full-mesh plan entry.
     sub_mesh = tuple((a, int(mesh.shape[a])) for a in names)
     plan = dispatch.local_plan(op, x.size, x.dtype, method,
-                               mesh=sub_mesh)
+                               mesh=sub_mesh, precision=policy)
+    # The policy's multiplicand cast, applied once to the global array
+    # (sharding-preserving elementwise cast) so every local partial
+    # sees the policy dtype; the split-capable engines are exempt
+    # exactly like the dispatch path.
+    x = dispatch._cast_in(x, policy, dispatch.op_spec(op), plan.method)
     spec = P(names, *([None] * (x.ndim - 1)))
+    run_kwargs = {} if policy is None else {"policy": policy}
 
     def body(xl):
-        partial = dispatch.execute(op, xl, plan)
+        partial = dispatch.execute(op, xl, plan, **run_kwargs)
         return mesh_psum(partial.astype(jnp.float32), names)
 
     return compat.shard_map(body, mesh=mesh, in_specs=(spec,),
@@ -174,7 +191,8 @@ def tc_psum(x, *, mesh=None, method: str = "auto",
 
 
 def tc_all_reduce(tree, *, mesh=None, method: str = "auto",
-                  op: str = "reduce_sum", via: str = "shard_map"):
+                  op: str = "reduce_sum", via: str = "shard_map",
+                  precision=None):
     """Leaf-wise ``tc_psum`` over a pytree: every leaf becomes one
     replicated f32 scalar (its global sum, or global sum of squares
     with ``op='squared_sum'``), each under its own mesh-keyed plan —
@@ -184,12 +202,13 @@ def tc_all_reduce(tree, *, mesh=None, method: str = "auto",
     mesh = _ambient_mesh(mesh)
     return jax.tree_util.tree_map(
         lambda leaf: tc_psum(leaf, mesh=mesh, method=method, op=op,
-                             via=via),
+                             via=via, precision=precision),
         tree)
 
 
 def tc_global_norm(tree, *, mesh=None, method: str = "auto",
-                   via: str = "shard_map") -> jax.Array:
+                   via: str = "shard_map",
+                   precision=None) -> jax.Array:
     """Global L2 norm of a pytree across the mesh — replicated f32.
 
     sqrt of the sum of per-leaf ``tc_psum(op='squared_sum')`` results:
@@ -209,6 +228,6 @@ def tc_global_norm(tree, *, mesh=None, method: str = "auto",
     mesh = _ambient_mesh(mesh)
     total = functools.reduce(jnp.add, [
         tc_psum(leaf, mesh=mesh, method=method, op="squared_sum",
-                via=via)
+                via=via, precision=precision)
         for leaf in leaves])
     return jnp.sqrt(total)

@@ -5,6 +5,8 @@ Each kernel module contains the raw pl.pallas_call + BlockSpec code;
 """
 
 from repro.kernels.ops import (  # noqa: F401
+    mma_ec_reduce,
+    mma_ec_squared_sum,
     mma_reduce,
     mma_reduce_partials,
     mma_rmsnorm,

@@ -1,0 +1,140 @@
+"""Compensated split-bf16 MMA reduction kernels (Pallas / TPU).
+
+The hand-tiled twin of ``repro.core.reduction.tc_reduce_ec`` — the
+``pallas_ec`` engine.  Each grid step owns a ``(chain * block_rows,
+m)`` f32 VMEM tile and:
+
+  1. **splits** the tile into ``split_words`` bf16 words in-register
+     (round-to-nearest residual splitting,
+     ``repro.core.precision.split_f32_words`` semantics — 3 words
+     reconstruct f32 exactly);
+  2. runs the paper's R-chain of **ones-MMAs per word** with f32
+     accumulation (one ``(1, block_rows) x (block_rows, m)`` dot per
+     sub-tile — the MXU path);
+  3. folds each word's ``(1, m)`` lane partial into a persistent
+     per-word VMEM accumulator with **Kahan compensation** (the
+     TwoSum carry lives in a second scratch buffer), so the
+     sequential-grid accumulation stays error-free to first order no
+     matter how many tiles stream through;
+  4. on the last step, collapses the ``(split_words, m)`` lane
+     accumulators with a pairwise-TwoSum tree **on the VPU** (not a
+     final MMA — re-rounding the compensated partials through another
+     contraction would throw the carries away) and adds the Kahan
+     carries back in.
+
+All accumulators are f32 (``repro.core.precision.ACCUM_DTYPE``), per
+the paper's single-pass precision contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.precision import ACCUM_DTYPE
+from repro.kernels.mma_reduce import MXU_M  # noqa: F401  (re-export)
+
+
+def _split_tile(tile, split_words: int):
+    """In-register round-to-nearest bf16 word split of one f32 tile."""
+    words = []
+    r = tile
+    for _ in range(split_words - 1):
+        hi = r.astype(jnp.bfloat16)
+        words.append(hi)
+        r = r - hi.astype(ACCUM_DTYPE)
+    words.append(r.astype(jnp.bfloat16))
+    return words
+
+
+def _word_chain(word, chain: int, block_rows: int):
+    """R-chain of ones-MMAs over one bf16 word: -> (1, m) f32 lanes."""
+    ones_row = jnp.ones((1, block_rows), dtype=word.dtype)
+    acc = jnp.zeros((1, word.shape[-1]), dtype=ACCUM_DTYPE)
+    for r in range(chain):
+        sub = word[r * block_rows:(r + 1) * block_rows, :]
+        acc = acc + jnp.dot(ones_row, sub,
+                            preferred_element_type=ACCUM_DTYPE)
+    return acc
+
+
+def _two_sum(a, b):
+    """Branch-free Knuth TwoSum (the in-kernel copy of
+    ``repro.core.precision.two_sum`` — Pallas kernels cannot call the
+    traced host helper, but the transform is identical)."""
+    s = a + b
+    bv = s - a
+    av = s - bv
+    return s, (a - av) + (b - bv)
+
+
+def _comp_collapse(vals):
+    """Pairwise-TwoSum tree over a (1, k) f32 lane vector -> (1, 1)."""
+    err = jnp.zeros((1, 1), dtype=ACCUM_DTYPE)
+    while vals.shape[-1] > 1:
+        k = vals.shape[-1]
+        if k % 2:
+            vals = jnp.pad(vals, ((0, 0), (0, 1)))
+            k += 1
+        s, e = _two_sum(vals[:, 0::2], vals[:, 1::2])
+        err = err + jnp.sum(e, axis=-1, keepdims=True)
+        vals = s
+    return vals + err
+
+
+def mma_ec_kernel(x_ref, o_ref, acc_ref, carry_ref, *, chain: int,
+                  block_rows: int, split_words: int,
+                  square: bool = False):
+    """Compensated split-bf16 reduction: sequential grid, per-word
+    Kahan-compensated (split_words, m) f32 VMEM accumulators."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    tile = x_ref[...].astype(ACCUM_DTYPE)
+    if square:
+        tile = tile * tile
+    for w, word in enumerate(_split_tile(tile, split_words)):
+        contrib = _word_chain(word, chain, block_rows)
+        # Kahan step: carry holds what the last add rounded away.
+        y = contrib - carry_ref[w:w + 1, :]
+        t = acc_ref[w:w + 1, :] + y
+        carry_ref[w:w + 1, :] = (t - acc_ref[w:w + 1, :]) - y
+        acc_ref[w:w + 1, :] = t
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _finish():
+        lanes = acc_ref[...].reshape(1, -1)
+        total = _comp_collapse(lanes)
+        # The carries are ~eps * |lanes|: a plain sum of them leaves
+        # only second-order error behind.
+        o_ref[...] = total + jnp.sum(carry_ref[...]).reshape(1, 1)
+
+
+def ec_call(x2d, *, chain: int, block_rows: int, split_words: int,
+            interpret: bool = False, square: bool = False):
+    """pallas_call wrapper: (G*chain*block_rows, m) f32 -> (1, 1) f32."""
+    rows, m = x2d.shape
+    tile_rows = chain * block_rows
+    grid = rows // tile_rows
+    assert grid * tile_rows == rows, (rows, tile_rows)
+    kernel = functools.partial(mma_ec_kernel, chain=chain,
+                               block_rows=block_rows,
+                               split_words=split_words, square=square)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile_rows, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), ACCUM_DTYPE),
+        scratch_shapes=[pltpu.VMEM((split_words, m), ACCUM_DTYPE),
+                        pltpu.VMEM((split_words, m), ACCUM_DTYPE)],
+        interpret=interpret,
+    )(x2d)

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.precision import ACCUM_DTYPE
+
 # The MXU tile size: the TPU analogue of the paper's ``m``.
 MXU_M = 128
 
@@ -118,7 +120,7 @@ def mma_split_kernel(x_ref, o_ref, mma_acc_ref, vpu_acc_ref, *,
         tile = block[:mma_rows, :]
         ones_row = jnp.ones((1, mma_rows), dtype=tile.dtype)
         mma_acc_ref[...] += jnp.dot(ones_row, tile,
-                                    preferred_element_type=jnp.float32)
+                                    preferred_element_type=ACCUM_DTYPE)
     if mma_rows < block.shape[0]:
         rest = block[mma_rows:, :].astype(jnp.float32)
         vpu_acc_ref[...] += jnp.sum(rest, axis=0, keepdims=True)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.precision import ACCUM_DTYPE
+
 
 def mma_rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float,
                        weight_offset: float):
@@ -29,7 +31,7 @@ def mma_rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float,
     ones_col = jnp.ones((d, 1), dtype=jnp.float32)
     # MMA row reduction: (rows, d) x (d, 1) -> (rows, 1) mean of squares.
     ms = jnp.dot(x * x, ones_col,
-                 preferred_element_type=jnp.float32) / float(d)
+                 preferred_element_type=ACCUM_DTYPE) / float(d)
     rstd = jax.lax.rsqrt(ms + eps)
     w = w_ref[...].astype(jnp.float32) + weight_offset
     o_ref[...] = (x * rstd * w).astype(o_ref.dtype)

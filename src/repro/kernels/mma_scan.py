@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.precision import ACCUM_DTYPE
+
 
 def _triu_ones(k: int, dtype, *, strict: bool = False):
     """U_k built from 2D iotas (TPU requires >= 2D iota)."""
@@ -50,10 +52,10 @@ def _scan_tile(tile, carry_in):
     """
     rows, m = tile.shape
     u_m = _triu_ones(m, tile.dtype)
-    p = jnp.dot(tile, u_m, preferred_element_type=jnp.float32)
+    p = jnp.dot(tile, u_m, preferred_element_type=ACCUM_DTYPE)
     t = p[:, -1:]                                       # (rows, 1) totals
     l_strict = _triu_ones(rows, jnp.float32, strict=True).T
-    c = jnp.dot(l_strict, t, preferred_element_type=jnp.float32)
+    c = jnp.dot(l_strict, t, preferred_element_type=ACCUM_DTYPE)
     total = c[-1:, :] + t[-1:, :]                       # (1, 1)
     return p + c + carry_in, total
 
@@ -99,7 +101,7 @@ def mma_segment_sum_kernel(v_ref, ids_ref, o_ref, acc_ref, *,
     seg = jax.lax.broadcasted_iota(jnp.int32, (rows * m, num_segments), 1)
     onehot = (ids_flat == seg).astype(v_flat.dtype)
     acc_ref[...] += jnp.dot(v_flat, onehot,
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=ACCUM_DTYPE)
 
     @pl.when(step == pl.num_programs(0) - 1)
     def _finish():

@@ -13,6 +13,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import mma_compensated as _mc
 from repro.kernels import mma_reduce as _mr
 from repro.kernels import mma_rmsnorm as _rn
 from repro.kernels import mma_scan as _ms
@@ -37,15 +38,16 @@ def _to_tiles(x, tile_rows: int, m: int):
     return flat.reshape(padded // m, m)
 
 
-def _resolve_auto(x, chain, block_rows, *, op: str):
+def _resolve_auto(x, chain, block_rows, *, op: str,
+                  engine: str = "pallas"):
     """Turn chain/block_rows='auto' into the registry's tuned ints.
 
-    The sweep is restricted to the Pallas engine so the geometry comes
-    from a plan tuned for THIS kernel, not from whatever engine won the
-    unrestricted cross-engine sweep."""
+    The sweep is restricted to the named Pallas engine so the geometry
+    comes from a plan tuned for THIS kernel, not from whatever engine
+    won the unrestricted cross-engine sweep."""
     if chain == "auto" or block_rows == "auto":
         from repro.core import autotune
-        plan = autotune.get_plan(x.size, x.dtype, op=op, engine="pallas")
+        plan = autotune.get_plan(x.size, x.dtype, op=op, engine=engine)
         if chain == "auto":
             chain = plan.chain
         if block_rows == "auto":
@@ -131,6 +133,51 @@ def _mma_squared_sum_impl(x, *, chain: int, block_rows: int,
     x2d = _to_tiles(x, chain * block_rows, m)
     out = _mr.single_pass_call(x2d, chain=chain, block_rows=block_rows,
                                interpret=itp, square=True)
+    return out[0, 0]
+
+
+def mma_ec_reduce(x, *, split_words: int = 2, chain=2, block_rows=128,
+                  m: int = MXU_M, interpret=None) -> jax.Array:
+    """Compensated split-bf16 reduction (Pallas ``pallas_ec`` engine):
+    the kernel twin of ``repro.core.reduction.tc_reduce_ec``.  Splits
+    each f32 tile into ``split_words`` bf16 words in-kernel, chains
+    one ones-MMA per word, and Kahan-compensates the f32 lane
+    accumulators across the sequential grid.  Returns an f32 scalar at
+    (near) correctly-rounded accuracy.  ``chain``/``block_rows``
+    accept 'auto' (plan registry, engine ``'pallas_ec'``)."""
+    chain, block_rows = _resolve_auto(x, chain, block_rows,
+                                      op="reduce_sum",
+                                      engine="pallas_ec")
+    return _mma_ec_impl(x, split_words=int(split_words), chain=chain,
+                        block_rows=block_rows, m=m, square=False,
+                        interpret=interpret)
+
+
+def mma_ec_squared_sum(x, *, split_words: int = 2, chain=2,
+                       block_rows=128, m: int = MXU_M,
+                       interpret=None) -> jax.Array:
+    """Compensated sum of squares: squares each tile in f32 on the VPU
+    before the in-kernel word split, then reduces like
+    ``mma_ec_reduce`` (the grad-norm path under a tight error
+    budget)."""
+    chain, block_rows = _resolve_auto(x, chain, block_rows,
+                                      op="squared_sum",
+                                      engine="pallas_ec")
+    return _mma_ec_impl(x, split_words=int(split_words), chain=chain,
+                        block_rows=block_rows, m=m, square=True,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "split_words", "chain", "block_rows", "m", "square", "interpret"))
+def _mma_ec_impl(x, *, split_words: int, chain: int, block_rows: int,
+                 m: int, square: bool, interpret) -> jax.Array:
+    itp = _should_interpret(interpret)
+    # The in-kernel split consumes f32 tiles whatever the input dtype.
+    x2d = _to_tiles(x.astype(jnp.float32), chain * block_rows, m)
+    out = _mc.ec_call(x2d, chain=chain, block_rows=block_rows,
+                      split_words=split_words, interpret=itp,
+                      square=square)
     return out[0, 0]
 
 

@@ -34,6 +34,36 @@ def squared_sum_ref(x) -> jax.Array:
     return jnp.sum(xf * xf)
 
 
+def ec_reduce_ref(x, *, split_words: int = 2,
+                  square: bool = False) -> jax.Array:
+    """Compensated split-bf16 sum: the exact semantics of the
+    ``mma_ec`` / ``pallas_ec`` engines without the MMA structure —
+    split into bf16 words (``repro.core.precision.split_f32_words``),
+    then a pairwise-TwoSum compensated tree over every word value
+    (``repro.core.precision.compensated_sum``)."""
+    from repro.core.precision import compensated_sum, split_f32_words
+    xf = x.astype(jnp.float32)
+    if square:
+        xf = xf * xf
+    parts = split_f32_words(xf, split_words)
+    return compensated_sum(jnp.concatenate(
+        [jnp.ravel(p).astype(jnp.float32) for p in parts]))
+
+
+def ec_scan_ref(x, *, split_words: int = 2,
+                inclusive: bool = True) -> jax.Array:
+    """f32 prefix sum of the word-split reconstruction — the pure-jnp
+    oracle of ``repro.core.scan.tc_scan_ec`` over the last axis."""
+    from repro.core.precision import split_f32_words
+    parts = split_f32_words(x.astype(jnp.float32), split_words)
+    recon = sum(p.astype(jnp.float32) for p in parts)
+    out = jnp.cumsum(recon, axis=-1)
+    if not inclusive:
+        zeros = jnp.zeros(out.shape[:-1] + (1,), out.dtype)
+        out = jnp.concatenate([zeros, out[..., :-1]], axis=-1)
+    return out
+
+
 def scan_ref(x, *, inclusive: bool = True) -> jax.Array:
     """f32 prefix sum of the flattened input, in the original shape."""
     flat = jnp.cumsum(jnp.ravel(x).astype(jnp.float32))

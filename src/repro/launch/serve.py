@@ -29,7 +29,8 @@ from repro.distributed import sharding as shd
 from repro.models import model_zoo
 
 
-def batched_logprobs(logits, tokens, *, method: str = "auto") -> jax.Array:
+def batched_logprobs(logits, tokens, *, method: str = "auto",
+                     precision=None) -> jax.Array:
     """Per-token log-probabilities: (B, S, V) logits + (B, S) ids →
     (B, S) f32.
 
@@ -40,11 +41,15 @@ def batched_logprobs(logits, tokens, *, method: str = "auto") -> jax.Array:
     batched ones-contraction, reshape-free, so sharded logits keep
     their layout and ``method='auto'`` resolves a mesh-keyed plan
     under a live mesh).  Accumulation is f32 throughout (the precision
-    contract); the max-shift keeps exp in range.
+    contract); the max-shift keeps exp in range.  ``precision``
+    threads an ``repro.core.precision.MmaPolicy`` to the vocab
+    reduction — a scoring service that must bound its normaliser
+    error passes a budget policy here and the auto plan honours it.
     """
     lf = logits.astype(jnp.float32)
     shift = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
-    z = ci.reduce_sum(jnp.exp(lf - shift), axis=-1, method=method)
+    z = ci.reduce_sum(jnp.exp(lf - shift), axis=-1, method=method,
+                      precision=precision)
     logz = jnp.log(z) + shift[..., 0]
     tok = jnp.take_along_axis(
         lf, tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
@@ -78,7 +83,7 @@ class Server:
 
     def score(self, params, tokens, *, mask=None,
               extras: Optional[dict] = None,
-              method: str = "auto") -> jax.Array:
+              method: str = "auto", precision=None) -> jax.Array:
         """Total log-probability of each sequence under the model
         (teacher forcing): one full-sequence forward (the model's
         ``logits`` path — ``prefill`` keeps only the last position),
@@ -95,10 +100,12 @@ class Server:
         if extras:
             batch.update(extras)
         logits = self._logits(params, batch)
-        lp = batched_logprobs(logits[:, :-1], toks[:, 1:], method=method)
+        lp = batched_logprobs(logits[:, :-1], toks[:, 1:],
+                              method=method, precision=precision)
         if mask is not None:
             lp = lp * jnp.asarray(mask, jnp.float32)[:, 1:]
-        return ci.reduce_sum(lp, axis=-1, method=method)
+        return ci.reduce_sum(lp, axis=-1, method=method,
+                             precision=precision)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:

@@ -65,7 +65,7 @@ def state_shardings(model, mesh, state_shapes: TrainState) -> TrainState:
 def _split_microbatches(batch, k: int):
     """(B, ...) -> (k, B/k, ...) preserving per-microbatch sharding
     (batch index strided so every device participates in every
-    microbatch — see DESIGN.md §4)."""
+    microbatch — see docs/design-notes.md §4)."""
     def one(v):
         b = v.shape[0]
         return jnp.moveaxis(v.reshape(b // k, k, *v.shape[1:]), 1, 0)

@@ -14,6 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import ACCUM_DTYPE
+
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
 from repro.models.param import Param
@@ -80,13 +82,13 @@ def _direct_attn(qg, k, v, *, qpos, kpos, causal, window, kv_len,
                  scale, cap):
     """Unchunked attention: qg (B,Sq,KV,G,hd), k/v (B,Sk,KV,hd)."""
     s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k,
-                   preferred_element_type=jnp.float32) * scale
+                   preferred_element_type=ACCUM_DTYPE) * scale
     s = L.softcap(s, cap)
     m = _mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
     s = jnp.where(m[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(v.dtype), v,
-                   preferred_element_type=jnp.float32)
+                   preferred_element_type=ACCUM_DTYPE)
     return o.astype(v.dtype)
 
 
@@ -110,7 +112,7 @@ def _chunked_attn(qg, k, v, *, qpos, causal, window, scale, cap,
         m, l, acc = carry
         k_i, v_i, kp_i = xs
         s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k_i,
-                       preferred_element_type=jnp.float32) * scale
+                       preferred_element_type=ACCUM_DTYPE) * scale
         s = L.softcap(s, cap)
         valid = _mask(qpos, kp_i, causal=causal, window=window, kv_len=Sk)
         s = jnp.where(valid[None, None, None], s, NEG_INF)
@@ -120,7 +122,7 @@ def _chunked_attn(qg, k, v, *, qpos, causal, window, scale, cap,
         l_new = l * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bkgqc,bckh->bkgqh", p.astype(v_i.dtype), v_i,
-            preferred_element_type=jnp.float32)
+            preferred_element_type=ACCUM_DTYPE)
         return (m_new, l_new, acc_new), None
 
     m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
@@ -151,7 +153,7 @@ def _banded_local_attn(qg, k, v, *, window: int, scale, cap):
     k2 = jnp.concatenate([kprev, kb], axis=2)          # (B, nb, 2w, KV, hd)
     v2 = jnp.concatenate([vprev, vb], axis=2)
     s = jnp.einsum("bnqkgh,bnckh->bkgnqc", qb, k2,
-                   preferred_element_type=jnp.float32) * scale
+                   preferred_element_type=ACCUM_DTYPE) * scale
     s = L.softcap(s, cap)
     # positions within the band: query t_q (0..w), key c (0..2w) offset -w
     tq = jnp.arange(w)[:, None]
@@ -164,7 +166,7 @@ def _banded_local_attn(qg, k, v, *, window: int, scale, cap):
     s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgnqc,bnckh->bnqkgh", p.astype(v2.dtype), v2,
-                   preferred_element_type=jnp.float32)
+                   preferred_element_type=ACCUM_DTYPE)
     return o.reshape(B, S, KV, G, hd_v).astype(v.dtype)
 
 

@@ -18,7 +18,7 @@ def rmsnorm_specs(d: int):
 
 
 def rmsnorm(params, x, *, eps: float = 1e-6, method: str = "mma",
-            fast_apply: bool = False):
+            fast_apply: bool = False, precision=None):
     """RMSNorm with (1+scale) weighting (gemma convention, scale init 0).
 
     The mean-of-squares row statistic is an axis-aware batched
@@ -37,15 +37,19 @@ def rmsnorm(params, x, *, eps: float = 1e-6, method: str = "mma",
     ``fast_apply`` (§Perf): the statistic stays f32, but the
     normalisation multiply runs in the input dtype — removes two f32
     round-trips over the (B, S, D) stream per norm.
+
+    ``precision`` threads an ``repro.core.precision.MmaPolicy`` to the
+    row-statistic reduction (multiplicand dtype / error budget for the
+    mean-of-squares).
     """
     from repro.core import dispatch
     d = x.shape[-1]
     xf = x.astype(jnp.float32)
     method = dispatch.resolve_method("reduce_sum", xf, method,
-                                     fallback="vpu",
+                                     fallback="vpu", precision=precision,
                                      axis=(x.ndim - 1,))
     ms = ci.reduce_sum(xf * xf, axis=-1, keepdims=True,
-                       method=method) / d
+                       method=method, precision=precision) / d
     rstd = jax.lax.rsqrt(ms + eps)
     if fast_apply:
         w = (1.0 + params["scale"].astype(jnp.float32)).astype(x.dtype)
@@ -75,10 +79,12 @@ def norm_specs(d: int, kind: str = "rmsnorm"):
 
 
 def apply_norm(params, x, *, kind: str = "rmsnorm",
-               method: str = "mma", fast_apply: bool = False):
+               method: str = "mma", fast_apply: bool = False,
+               precision=None):
     if kind == "layernorm":
         return layernorm(params, x)
-    return rmsnorm(params, x, method=method, fast_apply=fast_apply)
+    return rmsnorm(params, x, method=method, fast_apply=fast_apply,
+                   precision=precision)
 
 
 # ---------------------------------------------------------------- MLP

@@ -17,6 +17,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import ACCUM_DTYPE
+
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
 from repro.models.param import Param
@@ -116,9 +118,9 @@ def mla_attention(params, cfg, x, *, positions, cache=None,
         # q_eff[h] = q_nope[h] @ W_uk[h]^T : (B,Sq,H,r)
         q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"].astype(dt))
         s = jnp.einsum("bshr,bcr->bhsc", q_eff, ckv,
-                       preferred_element_type=jnp.float32)
+                       preferred_element_type=ACCUM_DTYPE)
         s += jnp.einsum("bshk,bck->bhsc", q_rope, kr,
-                        preferred_element_type=jnp.float32)
+                        preferred_element_type=ACCUM_DTYPE)
         s *= scale
         kpos = jnp.arange(ckv.shape[1], dtype=jnp.int32)
         valid = (kpos[None, :] <= positions[:, None]) & (kpos < kv_len)[None]
@@ -126,7 +128,7 @@ def mla_attention(params, cfg, x, *, positions, cache=None,
         p = jax.nn.softmax(s, axis=-1).astype(dt)
         # (output order bhsr keeps the batched-dot layout CPU-executable)
         ctx = jnp.einsum("bhsc,bcr->bhsr", p, ckv,
-                         preferred_element_type=jnp.float32).astype(dt)
+                         preferred_element_type=ACCUM_DTYPE).astype(dt)
         ctx = ctx.transpose(0, 2, 1, 3)  # -> (B, S, H, r)
         o = jnp.einsum("bshr,rhk->bshk", ctx, params["wv_b"].astype(dt))
     else:

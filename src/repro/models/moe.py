@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core import integration as ci
+from repro.core.precision import EXACT_OFFSETS
 from repro.distributed import sharding as shd
 from repro.models import layers as L
 from repro.models.param import Param
@@ -118,14 +119,15 @@ def _dispatch_combine(cfg, params, x_flat, ep_size: int,
     sorted_e = flat_e[order]
     counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
     # Per-expert buffer offsets = exclusive prefix of the counts — run
-    # as a triangular ones-MMA scan (repro.core.scan).  Precision is
-    # pinned to HIGHEST so the MXU/TF32 multiplicand truncation cannot
-    # shift an integer offset, and f32 accumulation is exact below
-    # 2^24; beyond that fall back to the int path.
+    # as a triangular ones-MMA scan (repro.core.scan) under the
+    # EXACT_OFFSETS precision policy: f32 multiplicands pinned past
+    # the MXU/TF32 truncation so an integer offset cannot shift, and
+    # f32 accumulation is exact below 2^24; beyond that fall back to
+    # the int path.
     if t * k < 2**24:
         starts = jnp.round(ci.cumsum(
             counts, inclusive=False, method="mma", chain=1,
-            precision=jax.lax.Precision.HIGHEST)).astype(jnp.int32)
+            precision=EXACT_OFFSETS)).astype(jnp.int32)
     else:
         starts = jnp.cumsum(counts) - counts
     pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]

@@ -10,7 +10,7 @@ decay that distinguishes Finch from RWKV-5.
 Training runs the WKV recurrence as a lax.scan over time (compile-size
 O(1) in sequence length); decode is a single state update.  The state is
 the "KV cache" of this family: O(1) in sequence length, which is why the
-long_500k cell runs for this arch (see DESIGN.md §7).
+long_500k cell runs for this arch (see docs/design-notes.md §7).
 """
 
 from __future__ import annotations
