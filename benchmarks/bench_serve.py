@@ -1,0 +1,113 @@
+"""Serving benchmark: continuous-batching engine throughput/latency.
+
+Drives ``repro.launch.serve.ContinuousServer`` end to end (admission
+prefill -> paged store -> batched per-row decode) on the smoke model
+and derives:
+
+  * prefill tok/s  — prompt tokens absorbed per second of admission
+    (batch-1 prefill + quantize-on-write into the slot's pages);
+  * decode tok/s   — steady-state generated tokens per second with
+    every slot live (one batched step = ``num_slots`` tokens);
+  * p50/p99 step latency — wall-clock per decode step (paged gather +
+    dequant + per-row decode + write-back + sampling).
+
+Numbers are XLA-CPU (see benchmarks/common.py context note).  Besides
+the CSV rows, ``run`` writes ``BENCH_serve.json`` at the repo root —
+scripts/check.sh verifies that file parses with the required keys, so
+CI notices when the serving bench bit-rots.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+JSON_KEYS = ("prefill_tok_s", "decode_tok_s", "p50_step_ms",
+             "p99_step_ms")
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serve.json")
+
+NUM_SLOTS = 4
+PROMPT_LEN = 8
+MAX_NEW = 33          # 1 admission token + 32 timed decode steps
+CAPACITY = 64
+
+
+def _measure(eng, params, reqs):
+    """One full drain; returns (admission_s, [step_s...])."""
+    stamps = []
+    t0 = time.perf_counter()
+    for ev in eng.serve(params, reqs):
+        stamps.append(time.perf_counter())
+    # equal-length, equal-budget requests: the first NUM_SLOTS events
+    # are admissions, then each decode step yields NUM_SLOTS events
+    admission_s = stamps[NUM_SLOTS - 1] - t0
+    steps = []
+    prev = stamps[NUM_SLOTS - 1]
+    for i in range(2 * NUM_SLOTS - 1, len(stamps), NUM_SLOTS):
+        steps.append(stamps[i] - prev)
+        prev = stamps[i]
+    return admission_s, steps
+
+
+def run(write_json: bool = True) -> dict:
+    import jax
+
+    from benchmarks.common import emit
+    from repro.configs import registry
+    from repro.launch.serve import ContinuousServer, Request
+    from repro.models import model_zoo
+
+    cfg = registry.get_config("gemma2-2b", smoke=True)
+    model = model_zoo.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def reqs():
+        return [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            PROMPT_LEN).astype(np.int32),
+                        max_new=MAX_NEW)
+                for i in range(NUM_SLOTS)]
+
+    eng = ContinuousServer(model, num_slots=NUM_SLOTS,
+                           capacity=CAPACITY, quant="none")
+    _measure(eng, params, reqs())          # warmup: compile both paths
+    admission_s, steps = _measure(eng, params, reqs())
+
+    prefill_tok_s = NUM_SLOTS * PROMPT_LEN / admission_s
+    p50 = float(np.percentile(steps, 50))
+    p99 = float(np.percentile(steps, 99))
+    decode_tok_s = NUM_SLOTS / p50
+
+    emit("serve/prefill_admission", admission_s / NUM_SLOTS * 1e6,
+         f"tok_s={prefill_tok_s:.1f};slots={NUM_SLOTS}")
+    emit("serve/decode_step_p50", p50 * 1e6,
+         f"tok_s={decode_tok_s:.1f};slots={NUM_SLOTS}")
+    emit("serve/decode_step_p99", p99 * 1e6,
+         f"steps={len(steps)}")
+
+    out = {
+        "prefill_tok_s": prefill_tok_s,
+        "decode_tok_s": decode_tok_s,
+        "p50_step_ms": p50 * 1e3,
+        "p99_step_ms": p99 * 1e3,
+        "num_slots": NUM_SLOTS,
+        "prompt_len": PROMPT_LEN,
+        "steps_timed": len(steps),
+        "arch": "gemma2-2b(smoke)",
+        "backend": jax.default_backend(),
+    }
+    if write_json:
+        with open(_JSON_PATH, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

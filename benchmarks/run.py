@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   scan        — triangular-MMA scan & segmented-sum engines + plans
   dispatch    — TC-op registry overhead (eager/jit/auto/decision)
   precision   — Fig. 7 bottom / Fig. 8 right (% error vs FP64 oracle)
+  serve       — continuous-batching engine (prefill/decode tok/s,
+                p50/p99 step latency; also writes BENCH_serve.json)
   integration — reduction engine inside the LM stack (loss/grad-norm)
   roofline    — §Roofline summary from the dry-run artifacts (if present)
 """
@@ -21,13 +23,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_dispatch, bench_precision,
                             bench_rb_sweep, bench_reduction, bench_scan,
-                            bench_split)
+                            bench_serve, bench_split)
     bench_reduction.run()
     bench_rb_sweep.run()
     bench_split.run()
     bench_scan.run()
     bench_dispatch.run()
     bench_precision.run()
+    bench_serve.run()
 
     # integration micro-bench: the MMA engine as used by the framework
     import jax

@@ -31,6 +31,10 @@
 #            docs/ maps to real code, and every *.md reference in
 #            Python docstrings/comments names a real doc (broken
 #            cross-references fail tier-1 locally);
+#   bench    BENCH_serve.json (written by benchmarks/run.py /
+#            benchmarks/bench_serve.py) parses and carries the
+#            serving-bench keys (prefill/decode tok/s, p50/p99 step
+#            latency) — a stale or hand-mangled artifact fails here;
 #   errbudget scripts/check_error_budget.py — fast fp64-oracle
 #            percent-error sweep over every reduce engine with hard
 #            per-engine ceilings (the precision subsystem's accuracy
@@ -78,6 +82,28 @@ echo "ok: no git-tracked __pycache__/*.pyc paths"
 
 echo "== docs =="
 python scripts/check_docs.py
+
+echo "== serving bench artifact =="
+python - <<'PY'
+import json
+import sys
+
+sys.path.insert(0, "benchmarks")
+from bench_serve import JSON_KEYS
+
+with open("BENCH_serve.json") as f:
+    data = json.load(f)
+missing = [k for k in JSON_KEYS if k not in data]
+bad = [k for k in JSON_KEYS
+       if k in data and not (isinstance(data[k], (int, float))
+                             and data[k] > 0)]
+if missing or bad:
+    raise SystemExit(
+        f"FAIL: BENCH_serve.json missing keys {missing}, "
+        f"non-positive {bad} — regenerate with "
+        f"PYTHONPATH=src:. python benchmarks/bench_serve.py")
+print("ok: BENCH_serve.json parses with", ", ".join(JSON_KEYS))
+PY
 
 echo "== error budget =="
 python scripts/check_error_budget.py

@@ -70,6 +70,11 @@ BLOCK_ROWS = (32, 128, 512)
 DEFAULT_M = 128  # MXU tile; the paper's m (=16 in wmma fragments).
 
 # Cost-model constants (arbitrary PRAM-step units; only ratios matter).
+# For SLO comparison the model unit gets a nominal wall-clock meaning:
+# 1 model unit ~= 1 µs.  Ratios still drive every within-sweep ranking;
+# the conversion only anchors the analytical mode's latency estimates
+# to the same ms scale a measured sweep reports.
+_MODEL_UNIT_US = 1.0
 _GRID_STEP_OVERHEAD = 48.0     # sequential grid-step / block-launch cost
 _VPU_THROUGHPUT = 8 * 128      # VPU lanes: elements per step
 _MXU_THROUGHPUT = 128 * 128    # MXU tile: elements folded per ones-MMA
@@ -88,7 +93,10 @@ class ReductionPlan:
     score that won the sweep, in microseconds when
     ``source='measured'`` and in model units when ``source='model'``;
     ``error_pct`` is the percent-error estimate the budget-aware sweep
-    scored this plan with (None when no budget applied).
+    scored this plan with (None when no budget applied);
+    ``latency_ms`` the latency estimate an SLO-objective sweep scored
+    it with (None when no objective applied — a plan whose latency_ms
+    exceeds the SLO is the visible best-effort fallback).
     """
     method: str   # 'mma' | 'mma_chained' | 'mma_ec' | 'pallas' |
     #               'pallas_ec' | 'vpu'
@@ -101,6 +109,7 @@ class ReductionPlan:
     source: str = "model"       # 'model' | 'measured'
     cost: float = 0.0
     error_pct: Optional[float] = None
+    latency_ms: Optional[float] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -205,12 +214,77 @@ def _prec_tag(policy: PolicyArg) -> str:
     return "" if policy is None else f"|prec:{policy.signature()}"
 
 
+@dataclasses.dataclass(frozen=True)
+class LatencyObjective:
+    """A per-call latency target the auto sweep selects under.
+
+    ``latency_slo_ms`` is the step budget one reduction may spend
+    (wall-clock ms when the sweep measures; nominal model-unit ms —
+    1 model unit ~= 1 µs — in analytical mode).  Selection flips the
+    budget-sweep's dual: instead of *fastest within the error budget*,
+    the winner is the **most accurate candidate whose latency meets
+    the SLO** (a serving stack buys all the accuracy its deadline
+    affords), falling back to the fastest eligible candidate when
+    nothing meets it — a decode step must not fail because the SLO was
+    set tighter than the hardware.  The recorded ``latency_ms`` on the
+    plan makes any shortfall visible, mirroring ``error_pct``.
+
+    The signature is the plan key's ``|lat:`` component (between
+    ``|prec:`` and ``|mesh:`` — see ``plan_key``), so prefill
+    (B×S×V) and decode (B×1×V) shapes tuned under one SLO resolve
+    *distinct, objective-keyed* plans by their n-buckets.
+    """
+    latency_slo_ms: float
+
+    def __post_init__(self):
+        if not self.latency_slo_ms > 0.0:
+            raise ValueError(
+                f"latency_slo_ms must be positive, got "
+                f"{self.latency_slo_ms!r}")
+
+    def signature(self) -> str:
+        return f"slo{self.latency_slo_ms:g}ms"
+
+    @classmethod
+    def from_signature(cls, sig: str) -> "LatencyObjective":
+        got = re.fullmatch(r"slo(.+)ms", sig)
+        if got is None:
+            raise ValueError(
+                f"bad latency-objective signature {sig!r} "
+                f"(expected 'slo<ms>ms', e.g. 'slo0.25ms')")
+        return cls(latency_slo_ms=float(got.group(1)))
+
+
+# objective argument: None, a LatencyObjective, a bare number of
+# milliseconds, or a signature string ("slo0.25ms").
+ObjectiveArg = Optional[object]
+
+
+def as_objective(obj: ObjectiveArg) -> Optional[LatencyObjective]:
+    """Normalise an ``objective`` argument to a LatencyObjective."""
+    if obj is None or isinstance(obj, LatencyObjective):
+        return obj
+    if isinstance(obj, str):
+        return LatencyObjective.from_signature(obj)
+    if isinstance(obj, (int, float)):
+        return LatencyObjective(latency_slo_ms=float(obj))
+    raise TypeError(
+        f"objective must be None, a LatencyObjective, a number of "
+        f"milliseconds, or an 'slo<ms>ms' signature; got {obj!r}")
+
+
+def _lat_tag(objective: ObjectiveArg) -> str:
+    obj = as_objective(objective)
+    return "" if obj is None else f"|lat:{obj.signature()}"
+
+
 def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
              engine: Engine = None, mesh: MeshArg = None,
-             policy: PolicyArg = None) -> str:
+             policy: PolicyArg = None,
+             objective: ObjectiveArg = None) -> str:
     """Registry key: op|n-bucket|dtype|backend[|engine][|prec:sig]
-    [|mesh:sig] (a flat string so the registry JSON-serialises as a
-    plain object).
+    [|lat:sig][|mesh:sig] (a flat string so the registry
+    JSON-serialises as a plain object).
 
     The engine suffix appears only for engine-restricted tunes (e.g.
     the tc_reduce / mma_reduce 'auto' spellings), so a per-engine
@@ -219,15 +293,19 @@ def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
     ``repro.core.precision.MmaPolicy.signature``) appears whenever the
     call carried a policy: plans tuned under different input dtypes,
     split-word pins, or error budgets live under their own keys.  The
-    mesh suffix (``|mesh:data4.model2`` — see ``mesh_signature``)
-    appears only under a live >1-device mesh: a mesh-keyed plan
-    describes the *local per-device* chain geometry of a size-n global
-    problem, so it never collides with the single-device plan for the
-    same n."""
+    latency suffix (``|lat:slo0.25ms`` —
+    ``LatencyObjective.signature``) appears whenever the call carried
+    a latency objective: plans selected under different SLOs — or
+    under an SLO vs none — never collide.  The mesh suffix
+    (``|mesh:data4.model2`` — see ``mesh_signature``) appears only
+    under a live >1-device mesh: a mesh-keyed plan describes the
+    *local per-device* chain geometry of a size-n global problem, so
+    it never collides with the single-device plan for the same n."""
     if backend is None:
         backend = jax.default_backend()
     return (f"{op}|{bucket_n(n)}|{jax.numpy.dtype(dtype).name}|{backend}"
-            f"{_engine_tag(engine)}{_prec_tag(policy)}{_mesh_tag(mesh)}")
+            f"{_engine_tag(engine)}{_prec_tag(policy)}"
+            f"{_lat_tag(objective)}{_mesh_tag(mesh)}")
 
 
 # VMEM feasibility for Pallas tiles: input tile + f32 working copy,
@@ -724,8 +802,8 @@ def reset_default_registry() -> None:
 def autotune(n: int, dtype, *, op: str = "reduce_sum",
              measure: bool = False, chains=CHAINS, blocks=BLOCK_ROWS,
              m: int = DEFAULT_M, engine: Engine = None,
-             mesh: MeshArg = None,
-             policy: PolicyArg = None) -> ReductionPlan:
+             mesh: MeshArg = None, policy: PolicyArg = None,
+             objective: ObjectiveArg = None) -> ReductionPlan:
     """Sweep the candidate space for one problem and return the winner.
 
     ``measure=False`` (default, and the only mode that is deterministic
@@ -754,8 +832,19 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
     most accurate one wins (best effort — a training step must not
     fail because a ceiling was set too tight; the plan's recorded
     ``error_pct`` makes the shortfall visible).
+
+    With an ``objective`` carrying a ``latency_slo_ms`` the selection
+    flips to the budget rule's dual: among the budget-eligible
+    candidates, the **most accurate one whose latency estimate meets
+    the SLO** wins (``cost`` in µs when measured, model units at the
+    nominal 1-unit-~=-1-µs anchor otherwise).  When nothing meets the
+    SLO the fastest eligible candidate wins — best effort again, with
+    the shortfall visible in the plan's recorded ``latency_ms``.  Both
+    constraints compose: the error budget filters eligibility first,
+    the SLO then picks within it.
     """
     axes = mesh_axes(mesh)
+    objective = as_objective(objective)
     nb = bucket_n(n)
     # Local per-device shard of the bucketed global problem.  The
     # measured size is the bucket rounded UP to a device-count
@@ -767,8 +856,12 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
     measure_nb = nb if axes is None else local * need
     combine = combine_model_cost(axes)
     budget = None if policy is None else policy.error_budget_pct
-    best: Optional[ReductionPlan] = None          # meets the budget
-    fallback: Optional[ReductionPlan] = None      # most accurate seen
+    # The SLO rule ranks by accuracy, so an objective forces error
+    # scoring even without a budget.
+    want_err = budget is not None or objective is not None
+    best: Optional[ReductionPlan] = None      # meets budget (+ SLO)
+    fastest: Optional[ReductionPlan] = None   # fastest within budget
+    fallback: Optional[ReductionPlan] = None  # most accurate seen
     for cand in candidate_plans(local_nb, dtype, chains=chains,
                                 blocks=blocks, m=m, engine=engine,
                                 op=op, policy=policy):
@@ -779,17 +872,27 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
         else:
             cost = model_cost(cand, local_nb, dtype, op=op) + combine
             cand = dataclasses.replace(cand, source="model", cost=cost)
-        if budget is not None:
+        if objective is not None:
+            lat_us = cost if measure else cost * _MODEL_UNIT_US
+            cand = dataclasses.replace(cand, latency_ms=lat_us / 1e3)
+        if want_err:
             err = (measured_percent_error(cand, local_nb, dtype, op=op)
                    if measure else
                    model_percent_error(cand, local_nb, dtype, op=op))
             cand = dataclasses.replace(cand, error_pct=err)
             if fallback is None or err < fallback.error_pct:
                 fallback = cand
-            if err > budget:
+            if budget is not None and err > budget:
                 continue
-        if best is None or cand.cost < best.cost:
+        if fastest is None or cand.cost < fastest.cost:
+            fastest = cand
+        if objective is None:
+            continue                 # objective-free: fastest wins
+        if cand.latency_ms <= objective.latency_slo_ms and \
+                (best is None or cand.error_pct < best.error_pct):
             best = cand
+    if best is None:
+        best = fastest      # no objective, or nothing met the SLO
     if best is None:
         best = fallback     # nothing met the budget: most accurate
     if best is None:
@@ -801,26 +904,31 @@ def get_plan(n: int, dtype, *, op: str = "reduce_sum",
              backend: Optional[str] = None,
              registry: Optional[PlanRegistry] = None,
              measure: bool = False, engine: Engine = None,
-             mesh: MeshArg = None,
-             policy: PolicyArg = None) -> ReductionPlan:
+             mesh: MeshArg = None, policy: PolicyArg = None,
+             objective: ObjectiveArg = None) -> ReductionPlan:
     """Cached plan lookup — the entry point of ``method='auto'``.
 
     Registry hit: return it (a model-mode entry is re-tuned and
     replaced when ``measure=True`` asks for wall-clock evidence).
     Miss: run ``autotune`` once for the (op, n-bucket, dtype, backend
-    [, engine][, prec][, mesh]) key and cache the winner.  ``mesh``
-    keys (and tunes) the plan for the local shard of a size-n global
-    problem under that mesh shape — the mesh-collective path
+    [, engine][, prec][, lat][, mesh]) key and cache the winner.
+    ``mesh`` keys (and tunes) the plan for the local shard of a size-n
+    global problem under that mesh shape — the mesh-collective path
     (``repro.distributed.tc_collectives``) and the auto path under a
     live mesh both resolve here, so a sharded run never silently
     reuses the single-device geometry.  ``policy`` keys the plan by
     the precision signature and makes the sweep error-budget-aware
     (see ``autotune``) — two calls differing only in budget resolve
-    independent plans.  Measuring for a backend other than the live
-    one is refused rather than silently timed on the wrong hardware.
+    independent plans.  ``objective`` keys the plan by the latency
+    signature and makes the selection SLO-aware — a serving stack's
+    prefill (B×S×V) and decode (B×1×V) reductions land in different
+    n-buckets and so resolve distinct, independently-selected plans
+    under one SLO.  Measuring for a backend other than the live one is
+    refused rather than silently timed on the wrong hardware.
     """
     reg = registry if registry is not None else default_registry()
-    key = plan_key(op, n, dtype, backend, engine, mesh, policy)
+    key = plan_key(op, n, dtype, backend, engine, mesh, policy,
+                   objective)
     plan = reg.get(key)
     if plan is not None and not (measure and plan.source != "measured"):
         return plan
@@ -831,6 +939,6 @@ def get_plan(n: int, dtype, *, op: str = "reduce_sum",
             f"{jax.default_backend()!r} host; use the analytical model "
             f"(measure=False) or tune on the target hardware")
     plan = autotune(n, dtype, op=op, measure=measure, engine=engine,
-                    mesh=mesh, policy=policy)
+                    mesh=mesh, policy=policy, objective=objective)
     reg.put(key, plan)
     return plan

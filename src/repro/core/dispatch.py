@@ -281,7 +281,8 @@ def known_method(op: str, method: str) -> bool:
 
 
 def local_plan(op: str, n: int, dtype, method: str = "auto", *,
-               mesh=None, chain: int = 4, precision=None):
+               mesh=None, chain: int = 4, precision=None,
+               objective=None):
     """Resolve a method spelling to an executable plan for a size-n
     problem WITHOUT running it — how the mesh-collective layer
     (``repro.distributed.tc_collectives``) picks the per-device
@@ -290,7 +291,8 @@ def local_plan(op: str, n: int, dtype, method: str = "auto", *,
     ``'auto'`` consults the plan registry (mesh-keyed when ``mesh`` is
     given — the plan is tuned for the local shard of the size-n global
     problem; precision-keyed and error-budget-constrained when
-    ``precision`` carries a policy); an explicit spelling resolves
+    ``precision`` carries a policy; latency-keyed and SLO-selected
+    when ``objective`` carries one); an explicit spelling resolves
     through the op's aliases to a one-engine plan with the hooks'
     default ``chain`` geometry (and the policy's ``split_words``); an
     engine the op does not declare raises exactly like ``dispatch``.
@@ -306,7 +308,7 @@ def local_plan(op: str, n: int, dtype, method: str = "auto", *,
         # (candidate_plans), so the resolved plan is always one the
         # execute-time predicates will accept.
         return autotune.get_plan(n, dtype, op=op, mesh=mesh,
-                                 policy=policy)
+                                 policy=policy, objective=objective)
     eng = spec.engine(method)
     if eng is None:
         raise _unknown_method(spec, method)
@@ -386,7 +388,7 @@ def resolve_method(op: str, x, method: str, *, fallback: str = "vpu",
 
 
 def dispatch(op: str, x, *, method: str = "auto", chain=None,
-             precision=None, **op_kwargs):
+             precision=None, objective=None, **op_kwargs):
     """THE dispatch path: every framework hook lands here.
 
     Explicit ``method`` spellings are resolved through the op's alias
@@ -409,6 +411,12 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
     engines' multiplicands to ``policy.input_dtype``, and reaches the
     engine runners (the scan family's MMA einsum precision, the
     ``mma_ec`` family's split-word count).
+
+    ``objective`` carries a latency target
+    (``repro.core.autotune.LatencyObjective``, or a bare number of
+    milliseconds): it keys — and SLO-constrains — the auto plan (see
+    ``autotune.autotune``); explicit methods ignore it (the caller
+    already chose the engine).
     """
     from repro.core import autotune
     spec = op_spec(op)
@@ -424,7 +432,8 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
         restrict = None if legal == spec.engine_names() else legal
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
                                  x.dtype, op=op, engine=restrict,
-                                 mesh=ctx.mesh_axes, policy=policy)
+                                 mesh=ctx.mesh_axes, policy=policy,
+                                 objective=objective)
         return execute(op, _cast_in(x, policy, spec, plan.method),
                        plan, **op_kwargs)
     eng = spec.engine(method)
@@ -438,7 +447,8 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
     if chain == "auto":
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
                                  x.dtype, op=op, engine=(eng.name,),
-                                 mesh=ctx.mesh_axes, policy=policy)
+                                 mesh=ctx.mesh_axes, policy=policy,
+                                 objective=objective)
         return execute(op, x, plan, **op_kwargs)
     overrides = {} if chain is None else {"chain": int(chain)}
     overrides.update(_plan_words(policy))

@@ -82,7 +82,7 @@ def _keepdims(out, axes: Optional[tuple], ndim: int, keepdims: bool):
 
 def reduce_sum(x, *, axis=None, keepdims: bool = False,
                method: Method = "mma", chain: int = 4,
-               precision=None) -> jax.Array:
+               precision=None, objective=None) -> jax.Array:
     """Sum over ``axis`` (None = all elements), f32.
 
     'auto' selects a cached ReductionPlan (engine + chain + block_rows)
@@ -92,6 +92,11 @@ def reduce_sum(x, *, axis=None, keepdims: bool = False,
     the batched ones-contraction ``tc_reduce_axes`` otherwise); the
     explicitly-chained tc_reduce and the Pallas kernel are the
     flatten-only paper-structured single-device paths.
+
+    ``objective`` (a ``repro.core.autotune.LatencyObjective`` or a
+    bare number of milliseconds) makes the 'auto' selection SLO-aware
+    and keys the plan with the ``|lat:`` suffix — the serving stack's
+    latency knob; explicit methods ignore it.
 
     >>> float(reduce_sum(jnp.ones((2, 8))))
     16.0
@@ -107,12 +112,14 @@ def reduce_sum(x, *, axis=None, keepdims: bool = False,
     if axes == ():                  # reduce over no axes (jnp semantics)
         return x.astype(jnp.float32)
     out = dispatch.dispatch("reduce_sum", x, method=method, chain=chain,
-                            precision=precision, axis=axes)
+                            precision=precision, objective=objective,
+                            axis=axes)
     return _keepdims(out, axes, x.ndim, keepdims)
 
 
 def reduce_mean(x, *, axis=None, keepdims: bool = False,
-                method: Method = "mma", precision=None) -> jax.Array:
+                method: Method = "mma", precision=None,
+                objective=None) -> jax.Array:
     """Mean over ``axis`` (None = all elements), f32.
 
     >>> import numpy as np
@@ -123,7 +130,8 @@ def reduce_mean(x, *, axis=None, keepdims: bool = False,
     count = x.size if axes is None \
         else math.prod(x.shape[a] for a in axes)
     return reduce_sum(x, axis=axis, keepdims=keepdims,
-                      method=method, precision=precision) / count
+                      method=method, precision=precision,
+                      objective=objective) / count
 
 
 def masked_mean(values, mask, *, method: Method = "mma",
@@ -151,7 +159,7 @@ def masked_mean(values, mask, *, method: Method = "mma",
 
 def squared_sum(x, *, axis=None, keepdims: bool = False,
                 method: Method = "mma", chain: int = 4,
-                precision=None) -> jax.Array:
+                precision=None, objective=None) -> jax.Array:
     """sum(x^2) over ``axis`` (None = all) — grad-norm building block.
 
     'mma' form: <x, x> as one dot_general — the reduction rides the MXU
@@ -165,7 +173,7 @@ def squared_sum(x, *, axis=None, keepdims: bool = False,
         return xf * xf
     out = dispatch.dispatch("squared_sum", x, method=method,
                             chain=chain, precision=precision,
-                            axis=axes)
+                            objective=objective, axis=axes)
     return _keepdims(out, axes, x.ndim, keepdims)
 
 

@@ -102,6 +102,37 @@ class RunningStats:
         return out
 
 
+def synthetic_requests(vocab_size: int, *, n: int, seed: int = 0,
+                       min_len: int = 4, max_len: int = 16,
+                       min_new: int = 1, max_new: int = 16,
+                       stagger: int = 0) -> Iterator[dict]:
+    """Deterministic ragged request stream for the serving engine.
+
+    Yields ``n`` request dicts ``{"uid", "prompt", "max_new"}`` with
+    prompt lengths drawn uniformly from [min_len, max_len] and output
+    budgets from [min_new, max_new] — the heterogeneous (ragged
+    prompts, staggered completion) admission pattern continuous
+    batching exists for.  ``stagger`` repeats each drawn ``max_new``
+    modulo alignment so neighbouring requests finish at different
+    steps even when the draw collides.  Counter-based like
+    ``SyntheticLMData`` (request ``uid`` regenerates its payload), and
+    directly consumable by
+    ``repro.launch.serve.ContinuousServer.serve``.
+    """
+    for uid in range(n):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, uid]))
+        length = int(rng.integers(min_len, max_len + 1))
+        budget = int(rng.integers(min_new, max_new + 1))
+        if stagger:
+            budget = min_new + (budget - min_new + uid) % \
+                max(max_new - min_new + 1, 1)
+        yield {
+            "uid": uid,
+            "prompt": rng.integers(0, vocab_size, length).astype(np.int32),
+            "max_new": budget,
+        }
+
+
 def mask_positions(mask) -> jax.Array:
     """Packed position ids from a (B, S) mask: each valid token's index
     among the valid tokens of its row — an exclusive masked prefix scan
@@ -172,14 +203,29 @@ class SyntheticLMData:
 
     def iter(self, start_step: int = 0, prefetch: int = 2
              ) -> Iterator[dict]:
-        """Prefetching iterator from ``start_step`` (for resume)."""
+        """Prefetching iterator from ``start_step`` (for resume).
+
+        Shutdown is cooperative: the worker only ever blocks in a
+        *timed* put so it re-checks the stop event even when the
+        consumer abandons the iterator with a full queue (an untimed
+        ``q.put`` would park the thread forever — the producer never
+        wakes to see the stop flag, leaking one thread per abandoned
+        iterator).  The finally block sets the flag, drains the queue
+        to unblock an in-flight put, and joins the worker.
+        """
         q: queue.Queue = queue.Queue(maxsize=prefetch)
         stop = threading.Event()
 
         def worker():
             step = start_step
             while not stop.is_set():
-                q.put(self.batch_at(step))
+                item = self.batch_at(step)
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
                 step += 1
 
         t = threading.Thread(target=worker, daemon=True)
@@ -189,3 +235,9 @@ class SyntheticLMData:
                 yield q.get()
         finally:
             stop.set()
+            while True:           # unblock a put racing the flag
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            t.join(timeout=5.0)

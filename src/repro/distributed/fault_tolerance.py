@@ -40,6 +40,12 @@ def remesh(devices: Optional[Sequence] = None, *, model_parallel: int,
 
     data' = floor(n / model) — elasticity happens on the data axis.  If
     ``pod_size`` divides the device count, a leading 'pod' axis is kept.
+
+    Degenerate pod geometries fall back to the flat (data, model)
+    mesh instead of erroring: a ``pod_size`` smaller than (or not a
+    multiple of) ``model_parallel`` cannot host a whole model group
+    per pod, so the pod axis is dropped — after losing most of a pod
+    the survivors still get a valid mesh.
     """
     devices = list(devices if devices is not None else jax.devices())
     n = len(devices)
@@ -50,7 +56,8 @@ def remesh(devices: Optional[Sequence] = None, *, model_parallel: int,
     if n == 0:
         raise RuntimeError("no usable devices for remesh")
     data = n // model_parallel
-    if pod_size and data % (pod_size // model_parallel) == 0 and \
+    if pod_size and pod_size % model_parallel == 0 and \
+            data % (pod_size // model_parallel) == 0 and \
             n % pod_size == 0:
         pods = n // pod_size
         arr = np.array(devices).reshape(pods, pod_size // model_parallel,

@@ -1,16 +1,30 @@
-"""Batched serving: prefill + decode loop with KV caches.
+"""Serving: fixed-batch and continuous-batching decode loops.
 
 ``Server`` packages jitted prefill/decode for a fixed batch geometry
-(the production pattern: a fleet of fixed-shape servers + a router).
-Greedy or temperature sampling; per-slot stop handling so a batch of
-heterogeneous requests drains correctly (continuous-batching-lite).
+(a fleet of fixed-shape servers + a router).  Greedy or temperature
+sampling; per-slot stop handling pins every post-EOS position to the
+stop id so a batch of heterogeneous requests drains correctly.
+
+``ContinuousServer`` is the production decode loop: a slot-based
+scheduler admits requests into freed slots *mid-stream* and evicts
+finished ones, KV state lives in a paged store
+(``repro.models.kv_cache.PagedKVCache`` — fixed-size pages, per-slot
+page tables, quantize-on-write), and tokens stream back per step
+through an iterator (``serve``) or callback (``generate``) API.  See
+docs/serving.md for the scheduler's slot lifecycle and the page-table
+layout.
 
 Scoring (``Server.score`` / ``batched_logprobs``) normalises the
 batched logits through the TC reduction path: the log-softmax
 normaliser's sum over vocab and the per-sequence fold both ride
 ``repro.core.integration.reduce_sum`` (the batched ones-contraction on
 the matrix unit, mesh-keyed plans under a live mesh) instead of ad-hoc
-vector-lane sums.
+vector-lane sums.  Both scoring entry points take an ``objective``
+(``repro.core.autotune.LatencyObjective`` or a plain SLO in ms): under
+``method='auto'`` the vocab reduction then resolves a *latency-keyed*
+plan (``|lat:`` suffix) — prefill-shaped (B, S, V) logits and
+single-token decode (B, 1, V) logits bucket to different problem
+sizes, so each shape gets its own SLO-constrained plan.
 """
 
 from __future__ import annotations
@@ -18,7 +32,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Optional
+from collections import deque
+from typing import Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +42,12 @@ import numpy as np
 from repro.core import integration as ci
 from repro.distributed import sharding as shd
 from repro.models import model_zoo
+from repro.models import transformer as T
+from repro.models.kv_cache import PagedKVCache
 
 
 def batched_logprobs(logits, tokens, *, method: str = "auto",
-                     precision=None) -> jax.Array:
+                     precision=None, objective=None) -> jax.Array:
     """Per-token log-probabilities: (B, S, V) logits + (B, S) ids →
     (B, S) f32.
 
@@ -45,11 +62,15 @@ def batched_logprobs(logits, tokens, *, method: str = "auto",
     threads an ``repro.core.precision.MmaPolicy`` to the vocab
     reduction — a scoring service that must bound its normaliser
     error passes a budget policy here and the auto plan honours it.
+    ``objective`` threads a latency SLO the same way (a
+    ``repro.core.autotune.LatencyObjective``, its signature string, or
+    a number of milliseconds): the auto plan is then the most accurate
+    candidate meeting the SLO for *this* logits shape.
     """
     lf = logits.astype(jnp.float32)
     shift = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
     z = ci.reduce_sum(jnp.exp(lf - shift), axis=-1, method=method,
-                      precision=precision)
+                      precision=precision, objective=objective)
     logz = jnp.log(z) + shift[..., 0]
     tok = jnp.take_along_axis(
         lf, tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
@@ -61,13 +82,15 @@ class Server:
     model: object
     mesh: Optional[object] = None
     temperature: float = 0.0
+    extra_capacity: int = 64   # decode headroom the prefill allocates
 
     def __post_init__(self):
         m = self.model
 
         def prefill(params, batch):
             with shd.axis_rules(self.mesh):
-                return m.prefill(params, batch)
+                return m.prefill(params, batch,
+                                 extra_capacity=self.extra_capacity)
 
         def decode(params, batch):
             with shd.axis_rules(self.mesh):
@@ -83,7 +106,8 @@ class Server:
 
     def score(self, params, tokens, *, mask=None,
               extras: Optional[dict] = None,
-              method: str = "auto", precision=None) -> jax.Array:
+              method: str = "auto", precision=None,
+              objective=None) -> jax.Array:
         """Total log-probability of each sequence under the model
         (teacher forcing): one full-sequence forward (the model's
         ``logits`` path — ``prefill`` keeps only the last position),
@@ -101,11 +125,12 @@ class Server:
             batch.update(extras)
         logits = self._logits(params, batch)
         lp = batched_logprobs(logits[:, :-1], toks[:, 1:],
-                              method=method, precision=precision)
+                              method=method, precision=precision,
+                              objective=objective)
         if mask is not None:
             lp = lp * jnp.asarray(mask, jnp.float32)[:, 1:]
         return ci.reduce_sum(lp, axis=-1, method=method,
-                             precision=precision)
+                             precision=precision, objective=objective)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:
@@ -116,7 +141,14 @@ class Server:
     def generate(self, params, prompts: np.ndarray, *, max_new: int = 32,
                  eos_id: Optional[int] = None, seed: int = 0,
                  extras: Optional[dict] = None):
-        """prompts: (B, S) int32. Returns (B, <=max_new) generated ids."""
+        """prompts: (B, S) int32. Returns (B, <=max_new) generated ids.
+
+        Rows that hit ``eos_id`` before the rest of the batch stay
+        pinned to ``eos_id``: the sampled continuation of a finished
+        row is garbage (the model was never asked to continue past its
+        stop), so every post-EOS position is overwritten before it is
+        emitted or fed back as the next decode input.
+        """
         b, s = prompts.shape
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extras:
@@ -128,18 +160,257 @@ class Server:
         key, k0 = jax.random.split(key)
         tok = self._sample(logits, k0)
         for i in range(max_new):
-            out.append(np.asarray(tok))
+            t = np.asarray(tok)
             if eos_id is not None:
-                done |= np.asarray(tok) == eos_id
-                if done.all():
-                    break
-            step_batch = {"token": tok[:, None],
+                t = np.where(done, np.int32(eos_id), t)
+                done |= t == eos_id
+            out.append(t)
+            if eos_id is not None and done.all():
+                break
+            step_batch = {"token": jnp.asarray(t)[:, None],
                           "pos": jnp.asarray(s + i, jnp.int32),
                           "caches": caches}
             logits, caches = self._decode(params, step_batch)
             key, ki = jax.random.split(key)
             tok = self._sample(logits, ki)
         return np.stack(out, axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request for the continuous engine."""
+    uid: int
+    prompt: np.ndarray          # (S,) int32 token ids
+    max_new: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One streamed token: request ``uid`` emitted its ``index``-th
+    output token.  ``done`` marks the request's final token (EOS or
+    ``max_new`` reached); ``logprob`` is filled when the engine runs
+    with ``logprobs=True``."""
+    uid: int
+    index: int
+    token: int
+    done: bool
+    logprob: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Scheduler state for one live slot (see docs/serving.md)."""
+    uid: int
+    last_tok: int               # feeds the next decode step
+    next_pos: int               # absolute position it will occupy
+    n_out: int                  # tokens emitted so far
+    max_new: int
+
+
+class ContinuousServer:
+    """Continuous-batching decode engine over a paged KV store.
+
+    A fixed bank of ``num_slots`` decode slots steps in lock-step
+    (one batched per-row decode per iteration, each slot at its own
+    absolute position); a scheduler admits pending requests into free
+    slots *between* steps — a request finishing at step t frees its
+    slot for a new admission at step t+1, no batch drain — and evicts
+    finished ones, returning their pages to the pool.
+
+    Admission runs the request's prompt as a batch-1 prefill with
+    ``extra_capacity`` topping the prompt up to ``capacity``, then
+    quantizes the whole prompt's KV into the slot's pages
+    (``PagedKVCache.write_slot``).  Each decode step reads the paged
+    store (``as_dense`` — gather + compensated dequant), runs the
+    model's per-row decode, and writes back only the one new token per
+    live slot (``write_token``), so quantization error never
+    compounds.  ``quant='none'`` stores raw KV and the engine's
+    streamed tokens are bit-identical to draining the same requests
+    one at a time through ``Server.generate`` (greedy); ``'int8'``
+    adds codes+scale (+ bf16 residual under a ``split_words >= 2``
+    policy) quantize-on-write.
+
+    Sampling is per-request deterministic: temperature 0 is greedy;
+    otherwise the categorical key is folded from (seed, uid, index),
+    so a request's sample stream does not depend on which slot or
+    step served it.
+
+    ``latency_slo_ms`` arms the autotuner's latency objective for the
+    scoring reductions (``logprobs=True``): admission scores
+    prefill-shaped logits, the decode loop scores (num_slots, 1, V)
+    logits, and each resolves its own ``|lat:``-keyed plan.
+    """
+
+    def __init__(self, model, *, num_slots: int = 4, capacity: int = 128,
+                 page_size: int = 16, quant: str = "none",
+                 precision=None, mesh=None, temperature: float = 0.0,
+                 latency_slo_ms: Optional[float] = None,
+                 logprobs: bool = False, seed: int = 0):
+        cfg = model.cfg
+        if cfg.is_encdec or cfg.vision_tokens:
+            raise ValueError(
+                "ContinuousServer serves text decoders; enc-dec and "
+                "vision configs need per-request memory (use Server)")
+        self.model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        self.num_slots = int(num_slots)
+        self.capacity = int(capacity)
+        self.page_size = int(page_size)
+        self.quant = quant
+        self.precision = precision
+        self.temperature = float(temperature)
+        self.objective = latency_slo_ms
+        self.logprobs = bool(logprobs)
+        self.seed = int(seed)
+        m = model
+
+        def prefill(params, batch, extra_capacity):
+            with shd.axis_rules(self.mesh):
+                return m.prefill(params, batch,
+                                 extra_capacity=extra_capacity)
+
+        def decode(params, batch):
+            with shd.axis_rules(self.mesh):
+                return m.decode_step(params, batch)
+
+        self._prefill = jax.jit(prefill,
+                                static_argnames=("extra_capacity",))
+        self._decode = jax.jit(decode)
+
+    # ------------------------------------------------------ pieces
+
+    def _new_store(self) -> PagedKVCache:
+        template = jax.eval_shape(lambda: T.init_decoder_cache(
+            self.cfg, self.num_slots, self.capacity, 0))
+        return PagedKVCache(template, num_slots=self.num_slots,
+                            page_size=self.page_size, quant=self.quant,
+                            precision=self.precision)
+
+    def _pick(self, row_logits, uid: int, index: int) -> int:
+        """Sample one token from a (V,) logits row."""
+        if self.temperature <= 0.0:
+            return int(jnp.argmax(row_logits))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), uid),
+            index)
+        return int(jax.random.categorical(
+            key, row_logits / self.temperature))
+
+    def _lp(self, logits, tokens) -> jax.Array:
+        """(B,) logprob of each row's token under its (B, 1, V) or
+        (1, S, V) logits — the latency-objective scoring reduction."""
+        lp = batched_logprobs(logits, tokens, method="auto",
+                              precision=self.precision,
+                              objective=self.objective)
+        return lp[:, -1]
+
+    # -------------------------------------------------------- loop
+
+    def serve(self, params, requests, *,
+              eos_id: Optional[int] = None) -> Iterator[TokenEvent]:
+        """Stream tokens for ``requests`` (iterable of ``Request``).
+
+        Yields one ``TokenEvent`` per generated token, in scheduler
+        order: admissions (slot order), then the step's decode
+        results (slot order), each step.  The iterator drives the
+        engine — consuming it lazily backpressures the decode loop.
+        Items may be ``Request`` objects or the equivalent dicts
+        (``repro.data.pipeline.synthetic_requests`` yields the
+        latter).
+        """
+        pending = deque(r if isinstance(r, Request) else Request(**r)
+                        for r in requests)
+        for r in pending:
+            need = len(r.prompt) + r.max_new
+            if r.max_new < 1:
+                raise ValueError(f"request {r.uid}: max_new must be >= 1")
+            if need > self.capacity:
+                raise ValueError(
+                    f"request {r.uid}: prompt {len(r.prompt)} + "
+                    f"max_new {r.max_new} exceeds capacity "
+                    f"{self.capacity}")
+        store = self._new_store()
+        slots: dict[int, _Slot] = {}
+
+        while pending or slots:
+            # --- admission: fill every free slot from the queue
+            for s in range(self.num_slots):
+                if not pending or s in slots:
+                    continue
+                req = pending.popleft()
+                prompt = np.asarray(req.prompt, np.int32)
+                L = prompt.shape[0]
+                logits, caches = self._prefill(
+                    params, {"tokens": jnp.asarray(prompt[None])},
+                    self.capacity - L)
+                store.alloc_slot(s)
+                store.write_slot(s, caches)
+                tok = self._pick(logits[0, -1], req.uid, 0)
+                lp = None
+                if self.logprobs:
+                    lp = float(self._lp(
+                        logits, jnp.asarray([[tok]], jnp.int32))[0])
+                done = (eos_id is not None and tok == eos_id) \
+                    or req.max_new == 1
+                yield TokenEvent(req.uid, 0, tok, done, lp)
+                if done:
+                    store.free_slot(s)
+                else:
+                    slots[s] = _Slot(req.uid, tok, L, 1, req.max_new)
+            if not slots:
+                continue
+
+            # --- one batched per-row decode step for the live slots
+            toks = np.zeros((self.num_slots, 1), np.int32)
+            pos = np.zeros((self.num_slots,), np.int32)
+            for s, st in slots.items():
+                toks[s, 0] = st.last_tok
+                pos[s] = st.next_pos
+            dense = store.as_dense()
+            logits, caches = self._decode(
+                params, {"token": jnp.asarray(toks),
+                         "pos": jnp.asarray(pos), "caches": dense})
+            lps = None
+            picks = {s: self._pick(logits[s, -1], st.uid, st.n_out)
+                     for s, st in slots.items()}
+            if self.logprobs:
+                lpt = np.zeros((self.num_slots, 1), np.int32)
+                for s, t in picks.items():
+                    lpt[s, 0] = t
+                lps = np.asarray(self._lp(logits, jnp.asarray(lpt)))
+            for s in sorted(slots):
+                st = slots[s]
+                store.write_token(caches, s, st.next_pos)
+                t = picks[s]
+                idx = st.n_out
+                st.n_out += 1
+                done = (eos_id is not None and t == eos_id) \
+                    or st.n_out >= st.max_new
+                yield TokenEvent(st.uid, idx, t, done,
+                                 None if lps is None else float(lps[s]))
+                if done:
+                    store.free_slot(s)
+                    del slots[s]
+                else:
+                    st.last_tok = t
+                    st.next_pos += 1
+
+    def generate(self, params, requests, *,
+                 eos_id: Optional[int] = None,
+                 on_token: Optional[Callable] = None) -> dict:
+        """Drain ``requests``; returns {uid: (n,) int32 tokens}.
+
+        ``on_token`` (optional) is called with every ``TokenEvent`` as
+        it is produced — the callback form of the streaming API.
+        """
+        out: dict[int, list] = {}
+        for ev in self.serve(params, requests, eos_id=eos_id):
+            out.setdefault(ev.uid, []).append(ev.token)
+            if on_token is not None:
+                on_token(ev)
+        return {uid: np.asarray(toks, np.int32)
+                for uid, toks in out.items()}
 
 
 def main():
@@ -149,6 +420,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine (paged KV store)")
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--quant", choices=("none", "int8"), default="none")
+    ap.add_argument("--latency-slo-ms", type=float, default=None)
     args = ap.parse_args()
 
     from repro.configs import registry
@@ -158,6 +435,24 @@ def main():
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)
+
+    if args.continuous:
+        eng = ContinuousServer(
+            model, num_slots=args.num_slots, capacity=args.capacity,
+            quant=args.quant, latency_slo_ms=args.latency_slo_ms,
+            logprobs=args.latency_slo_ms is not None)
+        reqs = [Request(uid=i, prompt=prompts[i], max_new=args.max_new)
+                for i in range(args.batch)]
+        t0 = time.time()
+        outs = eng.generate(params, reqs)
+        dt = time.time() - t0
+        n = sum(len(t) for t in outs.values())
+        print(f"continuous: {n} tokens from {len(reqs)} requests in "
+              f"{dt:.2f}s ({n / dt:.1f} tok/s)")
+        for uid in sorted(outs)[:2]:
+            print(uid, outs[uid])
+        return
+
     extras = {}
     if cfg.vision_tokens:
         extras["vision_embeds"] = jnp.asarray(

@@ -67,15 +67,29 @@ def cache_axes():
 
 def _mask(qpos, kpos, *, causal: bool, window: Optional[int],
           kv_len=None):
-    """(..., Sq, C) boolean validity mask from position vectors."""
-    m = jnp.ones((qpos.shape[-1], kpos.shape[-1]), bool)
+    """(..., Sq, C) boolean validity mask from position vectors.
+
+    ``qpos`` (Sq,) yields a batch-shared (Sq, C) mask; (B, Sq) yields
+    a per-row (B, Sq, C) mask — the continuous-batching decode case,
+    where every slot sits at its own absolute position.  ``kv_len``
+    may likewise be a scalar or (B,) per-row valid-slot count.
+    """
+    q = qpos[..., :, None]                      # (Sq,1) | (B,Sq,1)
+    m = jnp.ones(q.shape[:-1] + kpos.shape, bool)
     if causal:
-        m &= kpos[None, :] <= qpos[:, None]
+        m &= kpos <= q
     if window is not None:
-        m &= kpos[None, :] > (qpos[:, None] - window)
+        m &= kpos > q - window
     if kv_len is not None:
-        m &= (kpos < kv_len)[None, :]
+        kl = jnp.asarray(kv_len)
+        m &= kpos < (kl[:, None, None] if kl.ndim else kl)
     return m
+
+
+def _expand_mask(m):
+    """Broadcast a ``_mask`` result over the (KV, G) score dims:
+    (Sq, C) -> (1,1,1,Sq,C); (B, Sq, C) -> (B,1,1,Sq,C)."""
+    return m[:, None, None] if m.ndim == 3 else m[None, None, None]
 
 
 def _direct_attn(qg, k, v, *, qpos, kpos, causal, window, kv_len,
@@ -85,7 +99,7 @@ def _direct_attn(qg, k, v, *, qpos, kpos, causal, window, kv_len,
                    preferred_element_type=ACCUM_DTYPE) * scale
     s = L.softcap(s, cap)
     m = _mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
-    s = jnp.where(m[None, None, None], s, NEG_INF)
+    s = jnp.where(_expand_mask(m), s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(v.dtype), v,
                    preferred_element_type=ACCUM_DTYPE)
@@ -115,7 +129,7 @@ def _chunked_attn(qg, k, v, *, qpos, causal, window, scale, cap,
                        preferred_element_type=ACCUM_DTYPE) * scale
         s = L.softcap(s, cap)
         valid = _mask(qpos, kp_i, causal=causal, window=window, kv_len=Sk)
-        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        s = jnp.where(_expand_mask(valid), s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -175,8 +189,11 @@ def attention(params, cfg, x, *, positions, kind: str = "global",
               decode: bool = False):
     """Self- or cross-attention.
 
-    positions: (Sq,) int32 absolute positions of the query tokens (decode
-    passes the single current index).  Returns (out, new_cache).
+    positions: (Sq,) int32 absolute positions of the query tokens
+    (decode passes the single current index), or (B, Sq) *per-row*
+    positions — the continuous-batching decode form, where each batch
+    slot serves a different request at its own absolute position
+    (requires ``decode`` with Sq == 1).  Returns (out, new_cache).
     """
     dt = x.dtype
     B, Sq, d = x.shape
@@ -186,13 +203,19 @@ def attention(params, cfg, x, *, positions, kind: str = "global",
     theta = cfg.rope_theta
     if kind == "local" and cfg.rope_theta_local is not None:
         theta = cfg.rope_theta_local
+    per_row = positions.ndim == 2
+    if per_row and not (decode or kind == "cross") and Sq != 1:
+        raise ValueError(
+            "per-row (B, Sq) positions require decode with Sq == 1 "
+            "(per-slot prefill is admitted one request at a time)")
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
     if cfg.qkv_bias:
         q = q + params["bq"].astype(dt)
     if cfg.use_qk_norm:
         q = _head_rmsnorm(q, params["q_norm"])
-    pos_b = jnp.broadcast_to(positions[None, :], (B, Sq))
+    pos_b = positions if per_row \
+        else jnp.broadcast_to(positions[None, :], (B, Sq))
     if kind != "cross":
         q = L.apply_rope(q, pos_b, theta=theta, fraction=cfg.rope_fraction)
     if getattr(cfg, "attn_seq_shard", False) and not decode \
@@ -238,7 +261,25 @@ def attention(params, cfg, x, *, positions, kind: str = "global",
             # Ring-buffer invariant: token t lives at slot t % cap.  Local
             # layers allocate cap == window, so the ring itself enforces
             # the sliding window during decode (no positional mask).
-            if decode:
+            if decode and per_row:
+                # Continuous batching: every slot writes its own ring
+                # position pos % cap (a one-hot scatter — the write
+                # index differs per row, so dynamic_update_slice cannot
+                # express it) and masks its own valid-slot count.
+                pos_now = pos_b[:, 0]                        # (B,)
+                widx = jax.lax.rem(pos_now, jnp.int32(cap))
+                hit = widx[:, None] == jnp.arange(cap,
+                                                  dtype=jnp.int32)[None]
+                ck = jnp.where(hit[:, :, None, None],
+                               k.astype(cache["k"].dtype), cache["k"])
+                cv = jnp.where(hit[:, :, None, None],
+                               v.astype(cache["v"].dtype), cache["v"])
+                new_cache = dict(cache, k=ck, v=cv, idx=idx + Sq)
+                k, v = ck, cv
+                kv_len = jnp.minimum(pos_now + 1, cap)       # (B,)
+                causal, window = False, None         # ring handles both
+                kpos = jnp.arange(cap, dtype=jnp.int32)
+            elif decode:
                 widx = jax.lax.rem(idx, jnp.int32(cap))
                 ck = jax.lax.dynamic_update_slice(
                     cache["k"], k.astype(cache["k"].dtype), (0, widx, 0, 0))

@@ -66,6 +66,13 @@ def _rms(x, scale, eps=1e-6):
             * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
 
 
+def _pos_b(positions, shape):
+    """(B, S) positions from a shared (S,) or per-row (B, S) vector."""
+    if positions.ndim == 2:
+        return positions
+    return jnp.broadcast_to(positions[None, :], shape)
+
+
 def _project_q(params, cfg, x, positions):
     m = cfg.mla
     dt = x.dtype
@@ -73,7 +80,7 @@ def _project_q(params, cfg, x, positions):
     ql = constrain(ql, ("batch", None, "q_lora"))
     q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_b"].astype(dt))
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
-    pos_b = jnp.broadcast_to(positions[None, :], x.shape[:2])
+    pos_b = _pos_b(positions, x.shape[:2])
     q_rope = L.apply_rope(q_rope, pos_b, theta=cfg.rope_theta)
     return q_nope, q_rope
 
@@ -85,7 +92,7 @@ def _latent_kv(params, cfg, x, positions):
     kv = x @ params["wkv_a"].astype(dt)
     ckv, kr = jnp.split(kv, [m.kv_lora_rank], axis=-1)
     ckv = _rms(ckv, params["kv_norm"])
-    pos_b = jnp.broadcast_to(positions[None, :], x.shape[:2])
+    pos_b = _pos_b(positions, x.shape[:2])
     kr = L.apply_rope(kr[:, :, None, :], pos_b, theta=cfg.rope_theta)[:, :, 0]
     return ckv, kr
 
@@ -99,16 +106,38 @@ def mla_attention(params, cfg, x, *, positions, cache=None,
     H = cfg.num_heads
     scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
 
+    per_row = positions.ndim == 2
+    if per_row and not decode and Sq != 1:
+        raise ValueError(
+            "per-row (B, Sq) positions require decode with Sq == 1 "
+            "(per-slot prefill is admitted one request at a time)")
+
     q_nope, q_rope = _project_q(params, cfg, x, positions)
     ckv_new, kr_new = _latent_kv(params, cfg, x, positions)
 
     new_cache = cache
     if cache is not None:
         idx = cache["idx"]
-        ckv_buf = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, idx, 0))
-        kr_buf = jax.lax.dynamic_update_slice(
-            cache["krope"], kr_new.astype(cache["krope"].dtype), (0, idx, 0))
+        if per_row:
+            # Continuous batching: each slot writes its own absolute
+            # position (one-hot scatter — per-row write indices).
+            pos_now = positions[:, 0]                        # (B,)
+            cap = cache["ckv"].shape[1]
+            hit = pos_now[:, None] == jnp.arange(cap,
+                                                 dtype=jnp.int32)[None]
+            ckv_buf = jnp.where(hit[:, :, None],
+                                ckv_new.astype(cache["ckv"].dtype),
+                                cache["ckv"])
+            kr_buf = jnp.where(hit[:, :, None],
+                               kr_new.astype(cache["krope"].dtype),
+                               cache["krope"])
+        else:
+            ckv_buf = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv_new.astype(cache["ckv"].dtype),
+                (0, idx, 0))
+            kr_buf = jax.lax.dynamic_update_slice(
+                cache["krope"], kr_new.astype(cache["krope"].dtype),
+                (0, idx, 0))
         new_cache = dict(cache, ckv=ckv_buf, krope=kr_buf, idx=idx + Sq)
 
     if decode:
@@ -123,8 +152,15 @@ def mla_attention(params, cfg, x, *, positions, cache=None,
                         preferred_element_type=ACCUM_DTYPE)
         s *= scale
         kpos = jnp.arange(ckv.shape[1], dtype=jnp.int32)
-        valid = (kpos[None, :] <= positions[:, None]) & (kpos < kv_len)[None]
-        s = jnp.where(valid[None, None], s, NEG_INF)
+        if per_row:
+            # Slot c of a (non-ring) latent cache holds position c, so
+            # per-row causality kpos <= pos is the exact validity mask.
+            valid = kpos[None, None, :] <= positions[:, :, None]
+            s = jnp.where(valid[:, None], s, NEG_INF)
+        else:
+            valid = (kpos[None, :] <= positions[:, None]) \
+                & (kpos < kv_len)[None]
+            s = jnp.where(valid[None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(dt)
         # (output order bhsr keeps the batched-dot layout CPU-executable)
         ctx = jnp.einsum("bhsc,bcr->bhsr", p, ckv,

@@ -155,10 +155,16 @@ def build(cfg) -> Model:
         return logits, caches
 
     def decode_step(params, batch):
-        """One token for the whole batch against existing caches."""
+        """One token for the whole batch against existing caches.
+
+        ``pos`` is a scalar () when every row sits at the same
+        position (the fixed-batch ``Server.generate`` loop), or (B,)
+        per-slot absolute positions (the continuous-batching engine:
+        each slot serves its own request at its own depth).
+        """
         caches = batch["caches"]
-        pos = batch["pos"]
-        positions = pos[None].astype(jnp.int32)
+        pos = jnp.asarray(batch["pos"], jnp.int32)
+        positions = pos[:, None] if pos.ndim == 1 else pos[None]
         hidden, caches, _ = T.decoder_forward(
             params, cfg, batch["token"], positions=positions,
             caches=caches, decode=True)

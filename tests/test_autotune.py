@@ -12,6 +12,7 @@ Covers the ISSUE-1 acceptance surface:
     geometry on the auto path).
 """
 
+import dataclasses
 import json
 import math
 
@@ -205,3 +206,128 @@ def test_measured_autotune_smoke():
         chains=(1, 4), blocks=(32,))
     assert plan.source == "measured"
     assert plan.cost > 0.0
+
+
+# ------------------------------------------------- latency objective
+
+
+def test_latency_objective_signature_round_trip():
+    obj = autotune.LatencyObjective(latency_slo_ms=0.25)
+    assert obj.signature() == "slo0.25ms"
+    back = autotune.LatencyObjective.from_signature(obj.signature())
+    assert back == obj
+    assert autotune.as_objective(0.25) == obj
+    assert autotune.as_objective("slo0.25ms") == obj
+    assert autotune.as_objective(obj) is obj
+    assert autotune.as_objective(None) is None
+    with pytest.raises(ValueError):
+        autotune.LatencyObjective(latency_slo_ms=0.0)
+    with pytest.raises(ValueError):
+        autotune.LatencyObjective.from_signature("0.25")
+
+
+def test_plan_key_latency_suffix_grammar():
+    """|lat: sits between |prec: and |mesh: and only appears when an
+    objective is given."""
+    base = autotune.plan_key("reduce_sum", 4_096, jnp.float32)
+    assert "|lat:" not in base
+    keyed = autotune.plan_key("reduce_sum", 4_096, jnp.float32,
+                              objective=0.25)
+    assert keyed == base + "|lat:slo0.25ms"
+    from repro.core.precision import MmaPolicy
+    full = autotune.plan_key(
+        "reduce_sum", 4_096, jnp.float32,
+        policy=MmaPolicy(split_words=2), objective="slo1ms",
+        mesh=(("data", 2),))
+    iprec, ilat, imesh = (full.index("|prec:"), full.index("|lat:"),
+                          full.index("|mesh:"))
+    assert iprec < ilat < imesh
+
+
+def test_objective_selects_most_accurate_within_slo(fresh_plan_registry):
+    """Under a generous SLO the objective must pick the *most accurate*
+    candidate that meets it (not the fastest), and record its latency
+    estimate on the plan."""
+    plan = autotune.autotune(2_048, jnp.float32, objective=1e9)
+    free = autotune.autotune(2_048, jnp.float32)
+    assert plan.latency_ms is not None and plan.error_pct is not None
+    assert free.latency_ms is None
+    # everything meets an enormous SLO, so accuracy dominates: the
+    # chosen plan's modelled error is the sweep's minimum
+    best_err = min(c.error_pct for c in (
+        dataclasses.replace(p, error_pct=autotune.model_percent_error(
+            p, 2_048, jnp.float32))
+        for p in autotune.candidate_plans(2_048, jnp.float32)))
+    assert plan.error_pct <= best_err + 1e-12
+
+
+def test_objective_falls_back_to_fastest_when_slo_unmeetable(
+        fresh_plan_registry):
+    """An SLO nothing satisfies degrades to the fastest candidate
+    instead of erroring — serving keeps running past its target."""
+    tight = autotune.autotune(1 << 22, jnp.float32, objective=1e-9)
+    free = autotune.autotune(1 << 22, jnp.float32)
+    assert tight.latency_ms > 1e-9
+    assert tight.method == free.method   # fastest == objective-free pick
+
+
+def test_objective_keys_prefill_and_decode_shapes_apart(
+        fresh_plan_registry):
+    """The serving acceptance check: under one latency SLO,
+    method='auto' resolves *different* registry entries for a
+    prefill-shaped reduction (B*S*V elements) and a single-token
+    decode reduction (B*1*V elements)."""
+    reg = fresh_plan_registry
+    B, S, V = 4, 128, 2_048
+    obj = autotune.LatencyObjective(latency_slo_ms=0.25)
+    kp = autotune.plan_key("reduce_sum", B * S * V, jnp.float32,
+                           objective=obj)
+    kd = autotune.plan_key("reduce_sum", B * 1 * V, jnp.float32,
+                           objective=obj)
+    assert kp != kd and kp.endswith("|lat:slo0.25ms") \
+        and kd.endswith("|lat:slo0.25ms")
+    pp = autotune.get_plan(B * S * V, jnp.float32, registry=reg,
+                           objective=obj)
+    pd = autotune.get_plan(B * 1 * V, jnp.float32, registry=reg,
+                           objective=obj)
+    keys = dict(reg.items())
+    assert kp in keys and kd in keys
+    assert keys[kp] == pp and keys[kd] == pd
+    # objective-keyed entries never shadow the objective-free plan
+    free = autotune.get_plan(B * V, jnp.float32, registry=reg)
+    assert autotune.plan_key("reduce_sum", B * V, jnp.float32) in \
+        dict(reg.items())
+    assert free.latency_ms is None
+
+
+def test_objective_composes_with_error_budget(fresh_plan_registry):
+    """objective + budget: the pick must meet the budget AND the SLO
+    when possible; with a generous SLO it is the budget-filtered
+    most-accurate candidate."""
+    from repro.core.precision import MmaPolicy
+    policy = MmaPolicy(split_words=2, error_budget_pct=1.0)
+    plan = autotune.autotune(8_192, jnp.float32, policy=policy,
+                             objective=1e9)
+    assert plan.error_pct is not None and plan.error_pct <= 1.0
+    assert plan.latency_ms is not None
+
+
+def test_objective_plan_json_round_trip(fresh_plan_registry):
+    reg = fresh_plan_registry
+    autotune.get_plan(4_096, jnp.float32, registry=reg, objective=0.5)
+    back = autotune.PlanRegistry.from_json(reg.to_json())
+    assert back.items() == reg.items()
+    key, plan = back.items()[0]
+    assert "|lat:slo0.5ms" in key
+    assert plan.latency_ms is not None
+
+
+def test_integration_reduce_sum_accepts_objective(fresh_plan_registry):
+    """End-to-end: the integration hook threads the objective and the
+    numbers stay on the parity surface."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(4, 2_048)).astype(np.float32))
+    got = reduce_sum(x, axis=-1, method="auto", objective=0.25)
+    want = np.asarray(x, np.float64).sum(-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                               atol=1e-3)

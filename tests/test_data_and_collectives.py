@@ -132,3 +132,50 @@ def test_shape_bytes_tuple_and_dtypes():
     assert _shape_bytes("bf16[10]") == 20
     assert _shape_bytes("(f32[4], u32[2])") == 24
     assert _shape_bytes("pred[16]") == 16
+
+
+def test_prefetch_worker_joins_on_shutdown():
+    """Regression: abandoning the iterator with a full prefetch queue
+    used to leave the worker parked forever in an untimed ``q.put``
+    (it never re-checked the stop event -> one leaked thread per
+    abandoned iterator).  The close path must drain and join."""
+    import threading
+    import time
+
+    p = _pipe(b=2, s=8)
+    before = set(threading.enumerate())
+    it = p.iter(prefetch=1)
+    next(it)
+    # let the worker refill the queue so it is blocked in put()
+    time.sleep(0.3)
+    spawned = [t for t in threading.enumerate() if t not in before]
+    assert spawned, "prefetch worker did not start"
+    it.close()
+    deadline = time.monotonic() + 5.0
+    while any(t.is_alive() for t in spawned):
+        assert time.monotonic() < deadline, \
+            "prefetch worker leaked after iterator close"
+        time.sleep(0.05)
+
+
+def test_synthetic_requests_ragged_and_deterministic():
+    """The serving admission stream: ragged lengths, staggered output
+    budgets, and counter-based determinism (uid regenerates its
+    payload)."""
+    from repro.data.pipeline import synthetic_requests
+
+    a = list(synthetic_requests(97, n=8, seed=3, min_len=2, max_len=9,
+                                min_new=1, max_new=6, stagger=1))
+    b = list(synthetic_requests(97, n=8, seed=3, min_len=2, max_len=9,
+                                min_new=1, max_new=6, stagger=1))
+    assert [r["uid"] for r in a] == list(range(8))
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra["prompt"], rb["prompt"])
+        assert ra["max_new"] == rb["max_new"]
+    lens = {len(r["prompt"]) for r in a}
+    assert len(lens) > 1, "prompts should be ragged"
+    assert all(2 <= len(r["prompt"]) <= 9 for r in a)
+    assert all(1 <= r["max_new"] <= 6 for r in a)
+    assert len({r["max_new"] for r in a}) > 1, "budgets should stagger"
+    assert all((r["prompt"] >= 0).all() and (r["prompt"] < 97).all()
+               for r in a)

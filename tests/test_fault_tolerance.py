@@ -1,0 +1,81 @@
+"""Elastic remesh unit tests (repro.distributed.fault_tolerance).
+
+Degenerate pod geometries run in a subprocess with 8 forced host
+devices (same pattern as tests/test_sharding_multidevice.py): the pod
+branch must never divide by zero — a ``pod_size`` smaller than (or not
+a multiple of) ``model_parallel`` falls back to the flat
+(data, model) mesh, and ragged survivor counts truncate to the
+largest full model group.  ``reassign`` determinism needs no devices.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import reassign
+
+_REMESH_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    from repro.distributed.fault_tolerance import remesh
+
+    def shape(**kw):
+        mesh = remesh(jax.devices()[:kw.pop("n")], **kw)
+        return [list(mesh.shape.keys()), list(mesh.shape.values())]
+
+    out = {}
+    # pod smaller than the model group: the old pod branch divided by
+    # pod_size // model_parallel == 0 -> ZeroDivisionError; now a flat
+    # mesh
+    out["pod_lt_model"] = shape(n=8, model_parallel=4, pod_size=2)
+    # pod not a multiple of the model group (6 % 4): flat fallback,
+    # not a half-model-group pod
+    out["pod_ragged_model"] = shape(n=8, model_parallel=4, pod_size=6)
+    # pod axis does not tile the data axis (data=4, pod covers 3): flat
+    out["pod_untiled"] = shape(n=8, model_parallel=2, pod_size=6)
+    # healthy pod geometry keeps the pod axis
+    out["pod_ok"] = shape(n=8, model_parallel=2, pod_size=4)
+    # survivor count not a multiple of the model group: truncate
+    out["ragged_survivors"] = shape(n=7, model_parallel=2)
+    # no pod hint at all
+    out["flat"] = shape(n=8, model_parallel=2)
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_remesh_degenerate_pod_geometries():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    p = subprocess.run([sys.executable, "-c", _REMESH_PROG],
+                       capture_output=True, text=True, env=env,
+                       timeout=300)
+    assert p.returncode == 0, p.stderr[-3000:]
+    line = [ln for ln in p.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    flat = [["data", "model"], [2, 4]]
+    assert out["pod_lt_model"] == flat
+    assert out["pod_ragged_model"] == flat
+    assert out["pod_untiled"] == [["data", "model"], [4, 2]]
+    assert out["pod_ok"] == [["pod", "data", "model"], [2, 2, 2]]
+    assert out["ragged_survivors"] == [["data", "model"], [3, 2]]
+    assert out["flat"] == [["data", "model"], [4, 2]]
+
+
+def test_reassign_deterministic_and_covering():
+    a = reassign(step=12, num_workers=3, num_shards=9)
+    b = reassign(step=12, num_workers=3, num_shards=9)
+    np.testing.assert_array_equal(a, b)
+    assert set(a) <= set(range(3))
+    # every shard owned by exactly one worker, load within one shard
+    counts = np.bincount(a, minlength=3)
+    assert counts.sum() == 9 and counts.max() - counts.min() <= 1
+    c = reassign(step=13, num_workers=3, num_shards=9)
+    assert not np.array_equal(a, c)

@@ -1,0 +1,208 @@
+"""Paged KV cache unit tests (repro.models.kv_cache).
+
+Covers the store in isolation with synthetic cache trees (the exact
+nested-dict geometry ``init_decoder_cache`` produces): round-trip
+fidelity for both quantization modes, the single-token write path, and
+the page allocator's slot-lifecycle invariants the continuous-batching
+scheduler leans on (no slot reuse before eviction, alloc/free/write on
+the wrong state raises, pages recycle exactly).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import MmaPolicy
+from repro.models.kv_cache import PagedKVCache, _leaf_paths, _tree_get
+
+NUM_SLOTS = 3
+CAP = 24
+PAGE = 8
+
+
+def _template(dtype=jnp.bfloat16, batch=NUM_SLOTS, cap=CAP):
+    """A two-stack tree shaped like a real decoder cache: one stacked
+    GQA block (2 repeats), one MLA block, one cross-attn memory dict
+    (no idx -> stays dense), one recurrent-state dict."""
+    R = 2
+    return {
+        "S0": {"L0": {"k": jnp.zeros((R, batch, cap, 2, 4), dtype),
+                      "v": jnp.zeros((R, batch, cap, 2, 4), dtype),
+                      "idx": jnp.zeros((R,), jnp.int32)}},
+        "S1": {"L0": {"ckv": jnp.zeros((1, batch, cap, 6), dtype),
+                      "krope": jnp.zeros((1, batch, cap, 3), dtype),
+                      "idx": jnp.zeros((1,), jnp.int32)}},
+        "S2": {"L0": {"cross": {"k": jnp.zeros((1, batch, 5, 2, 4),
+                                               dtype),
+                                "v": jnp.zeros((1, batch, 5, 2, 4),
+                                               dtype)},
+                      "self": {"k": jnp.zeros((1, batch, cap, 2, 4),
+                                              dtype),
+                               "v": jnp.zeros((1, batch, cap, 2, 4),
+                                              dtype),
+                               "idx": jnp.zeros((1,), jnp.int32)}}},
+        "S3": {"L0": {"wkv": jnp.zeros((1, batch, 2, 4, 4), dtype),
+                      "x_tm": jnp.zeros((1, batch, 8), dtype)}},
+    }
+
+
+def _filled(dtype=jnp.bfloat16, batch=1, cap=CAP, seed=0):
+    """The same tree with random contents (one admission's cache)."""
+    rng = np.random.default_rng(seed)
+    t = _template(dtype, batch, cap)
+    leaves, _ = _leaf_paths(t)
+    out = t
+    from repro.models.kv_cache import _tree_set
+    for path, leaf in leaves.items():
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            val = jnp.asarray(rng.standard_normal(leaf.shape),
+                              leaf.dtype)
+        else:
+            val = jnp.full(leaf.shape, 7, leaf.dtype)
+        out = _tree_set(out, path, val)
+    return out
+
+
+def test_paged_leaf_selection():
+    store = PagedKVCache(_template(), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="none")
+    paged = {"/".join(p) for p in store._paged}
+    # positional leaves with an idx sibling page; cross-attn memory
+    # (no idx) and recurrent state stay dense
+    assert paged == {"S0/L0/k", "S0/L0/v", "S1/L0/ckv", "S1/L0/krope",
+                     "S2/L0/self/k", "S2/L0/self/v"}
+    dense = {"/".join(p) for p in store._dense}
+    assert "S2/L0/cross/k" in dense and "S3/L0/wkv" in dense
+
+
+def test_round_trip_bit_exact_quant_none():
+    store = PagedKVCache(_template(), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="none")
+    src = _filled(batch=1, seed=1)
+    store.alloc_slot(2)
+    store.write_slot(2, src)
+    dense = store.as_dense()
+    leaves, paged = _leaf_paths(src)
+    for path in paged:
+        pl = store._paged[path]
+        got = _tree_get(dense, path)
+        got_row = jnp.take(got, 2, axis=pl.batch_axis)
+        src_row = jnp.take(leaves[path], 0, axis=pl.batch_axis)
+        assert bool(jnp.all(got_row == src_row)), path
+        # free slots read as zeros
+        assert bool(jnp.all(jnp.take(got, 0, axis=pl.batch_axis) == 0))
+
+
+def test_int8_split_words_within_error_budget():
+    """int8 codes + bf16 residual track f32 KV within the policy's
+    error budget (compensated two-word reconstruction)."""
+    policy = MmaPolicy(split_words=2, error_budget_pct=1e-2)
+    store = PagedKVCache(_template(jnp.float32), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="int8", precision=policy)
+    src = _filled(jnp.float32, batch=1, seed=2)
+    store.alloc_slot(0)
+    store.write_slot(0, src)
+    dense = store.as_dense()
+    leaves, paged = _leaf_paths(src)
+    for path in paged:
+        pl = store._paged[path]
+        got = jnp.take(_tree_get(dense, path), 0, axis=pl.batch_axis)
+        ref = jnp.take(leaves[path], 0, axis=pl.batch_axis)
+        rel = 100.0 * float(jnp.max(jnp.abs(got - ref))
+                            / jnp.max(jnp.abs(ref)))
+        assert rel <= policy.error_budget_pct, (path, rel)
+    # without the residual word the reconstruction is strictly coarser
+    bare = PagedKVCache(_template(jnp.float32), num_slots=NUM_SLOTS,
+                        page_size=PAGE, quant="int8",
+                        precision=MmaPolicy(split_words=1))
+    assert bare.residual is False and store.residual is True
+
+
+def test_int8_residual_exactly_recovers_bf16():
+    """bf16 KV (the production cache dtype) survives int8+residual
+    quantization bit-exactly — 8 code bits + 8 residual-mantissa bits
+    dominate a bf16 payload."""
+    store = PagedKVCache(_template(), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="int8")
+    src = _filled(batch=1, seed=3)
+    store.alloc_slot(1)
+    store.write_slot(1, src)
+    dense = store.as_dense()
+    leaves, paged = _leaf_paths(src)
+    for path in paged:
+        pl = store._paged[path]
+        got = jnp.take(_tree_get(dense, path), 1, axis=pl.batch_axis)
+        ref = jnp.take(leaves[path], 0, axis=pl.batch_axis)
+        assert bool(jnp.all(got == ref)), path
+
+
+def test_write_token_updates_single_position():
+    store = PagedKVCache(_template(), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="none")
+    store.alloc_slot(0)
+    store.write_slot(0, _filled(batch=1, seed=4))
+    before = store.as_dense()
+    step = _filled(batch=NUM_SLOTS, seed=5)
+    POS = 10
+    store.write_token(step, 0, POS)
+    after = store.as_dense()
+    leaves, paged = _leaf_paths(step)
+    for path in paged:
+        pl = store._paged[path]
+        got = jnp.take(_tree_get(after, path), 0, axis=pl.batch_axis)
+        old = jnp.take(_tree_get(before, path), 0, axis=pl.batch_axis)
+        new = jnp.take(leaves[path], 0, axis=pl.batch_axis)
+        # token axis is now leading-extra + 0 after the take; compare
+        # per position along the original token axis
+        tok_ax = pl.token_axis - 1 if pl.token_axis > pl.batch_axis \
+            else pl.token_axis
+        for t in range(pl.capacity):
+            g = jnp.take(got, t, axis=tok_ax)
+            want = jnp.take(new if t == POS else old, t, axis=tok_ax)
+            assert bool(jnp.all(g == want)), (path, t)
+
+
+def test_allocator_slot_lifecycle_invariants():
+    store = PagedKVCache(_template(), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="none")
+    store.alloc_slot(0)
+    with pytest.raises(RuntimeError, match="live"):
+        store.alloc_slot(0)            # no reuse before eviction
+    with pytest.raises(RuntimeError, match="not live"):
+        store.free_slot(1)             # free of a free slot
+    with pytest.raises(RuntimeError, match="not allocated"):
+        store.write_slot(1, _filled(batch=1))
+    with pytest.raises(RuntimeError, match="not allocated"):
+        store.write_token(_filled(batch=NUM_SLOTS), 1, 0)
+    with pytest.raises(IndexError):
+        store.alloc_slot(NUM_SLOTS)
+    # live tables are disjoint across slots; free slots unmapped
+    store.alloc_slot(1)
+    pages0 = store.slot_pages(0)
+    pages1 = store.slot_pages(1)
+    for path in pages0:
+        assert not (set(pages0[path]) & set(pages1[path]))
+        assert -1 not in pages0[path]
+    assert all(p == -1 for p in store.slot_pages(2)[
+        next(iter(pages0))])
+
+
+def test_pages_recycle_exactly():
+    store = PagedKVCache(_template(), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="none")
+    baseline = store.free_pages()
+    store.alloc_slot(0)
+    held = store.free_pages()
+    for path, n in held.items():
+        pps = store._paged[path].pages_per_slot
+        assert n == baseline[path] - pps
+    store.free_slot(0)
+    assert store.free_pages() == baseline
+    # exhausting the pool raises instead of corrupting live slots
+    for s in range(NUM_SLOTS):
+        store.alloc_slot(s)
+    small = PagedKVCache(_template(), num_slots=NUM_SLOTS,
+                         page_size=PAGE, quant="none")
+    small._paged[next(iter(small._paged))].free = []
+    with pytest.raises(RuntimeError, match="exhausted"):
+        small.alloc_slot(0)
