@@ -1,0 +1,100 @@
+"""Attention-op benchmark: fused kernel vs unfused scan vs vpu oracle.
+
+Times the ``attention`` op's three engines through the dispatch layer
+on two serving-shaped problems:
+
+  * prefill — causal self-attention at (B=1, Sq=Sk=256, KV=2, G=2,
+    hd=64), the shape where the fused kernel's in-kernel row
+    statistics amortize the KV block walk (all three engines);
+  * decode  — single-query per-row attention over a capacity-128 dense
+    KV view with a ring-buffer ``kv_len`` mask, the continuous-engine
+    step shape (fused + vpu only: the dense-prefill ``unfused_mma``
+    engine's capability predicate refuses dynamic valid lengths).
+
+Numbers are XLA-CPU with the Pallas kernel in interpret mode (see
+benchmarks/common.py context note) — relative ordering on real TPU
+hardware comes from the compiled kernel, so treat these as a
+bit-rot/regression tripwire, not a perf claim.  Besides the CSV rows,
+``run`` writes ``BENCH_attention.json`` at the repo root —
+scripts/check.sh verifies that file parses with the required keys.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+JSON_KEYS = ("prefill_fused_us", "prefill_unfused_us",
+             "prefill_vpu_us", "decode_fused_us", "decode_vpu_us")
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_attention.json")
+
+PREFILL = dict(B=1, Sq=256, Sk=256, KV=2, G=2, hd=64)
+DECODE = dict(B=4, Sq=1, Sk=128, KV=2, G=2, hd=64)
+
+
+def _problem(shape, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    B, Sq, Sk, KV, G, hd = (shape[k] for k in
+                            ("B", "Sq", "Sk", "KV", "G", "hd"))
+
+    def t(*s):
+        return jnp.asarray(rng.normal(size=s).astype(np.float32))
+
+    return (t(B, Sq, KV, G, hd), t(B, Sk, KV, hd), t(B, Sk, KV, hd))
+
+
+def run(write_json: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, time_us
+    from repro.core import dispatch
+
+    out = {}
+
+    qg, k, v = _problem(PREFILL)
+    kw = dict(k=k, v=v,
+              qpos=jnp.arange(PREFILL["Sq"], dtype=jnp.int32),
+              causal=True, scale=1.0 / np.sqrt(PREFILL["hd"]))
+    for eng, key in (("fused_pallas", "prefill_fused_us"),
+                     ("unfused_mma", "prefill_unfused_us"),
+                     ("vpu", "prefill_vpu_us")):
+        fn = jax.jit(lambda x, e=eng: dispatch.dispatch(
+            "attention", x, method=e, **kw))
+        us = time_us(fn, qg, iters=5, warmup=2)
+        out[key] = us
+        emit(f"attention/prefill_{eng}", us,
+             f"Sq={PREFILL['Sq']};Sk={PREFILL['Sk']};"
+             f"heads={PREFILL['KV']}x{PREFILL['G']}")
+
+    qg, k, v = _problem(DECODE, seed=1)
+    kw = dict(k=k, v=v,
+              qpos=jnp.asarray([[7], [31], [63], [100]], jnp.int32),
+              causal=True,
+              kv_len=jnp.asarray([8, 32, 64, 101], jnp.int32),
+              scale=1.0 / np.sqrt(DECODE["hd"]))
+    for eng, key in (("fused_pallas", "decode_fused_us"),
+                     ("vpu", "decode_vpu_us")):
+        fn = jax.jit(lambda x, e=eng: dispatch.dispatch(
+            "attention", x, method=e, **kw))
+        us = time_us(fn, qg, iters=5, warmup=2)
+        out[key] = us
+        emit(f"attention/decode_{eng}", us,
+             f"slots={DECODE['B']};cap={DECODE['Sk']}")
+
+    out.update(prefill=PREFILL, decode=DECODE,
+               backend=jax.default_backend())
+    if write_json:
+        with open(_JSON_PATH, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   split       — Fig. 6 (MXU/VPU split fraction)
   scan        — triangular-MMA scan & segmented-sum engines + plans
   dispatch    — TC-op registry overhead (eager/jit/auto/decision)
+  attention   — fused flash-attention kernel vs unfused/vpu engines
+                (prefill + decode shapes; writes BENCH_attention.json)
   precision   — Fig. 7 bottom / Fig. 8 right (% error vs FP64 oracle)
   serve       — continuous-batching engine (prefill/decode tok/s,
                 p50/p99 step latency; also writes BENCH_serve.json)
@@ -21,14 +23,16 @@ import sys
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_dispatch, bench_precision,
-                            bench_rb_sweep, bench_reduction, bench_scan,
-                            bench_serve, bench_split)
+    from benchmarks import (bench_attention, bench_dispatch,
+                            bench_precision, bench_rb_sweep,
+                            bench_reduction, bench_scan, bench_serve,
+                            bench_split)
     bench_reduction.run()
     bench_rb_sweep.run()
     bench_split.run()
     bench_scan.run()
     bench_dispatch.run()
+    bench_attention.run()
     bench_precision.run()
     bench_serve.run()
 

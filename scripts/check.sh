@@ -34,7 +34,10 @@
 #   bench    BENCH_serve.json (written by benchmarks/run.py /
 #            benchmarks/bench_serve.py) parses and carries the
 #            serving-bench keys (prefill/decode tok/s, p50/p99 step
-#            latency) — a stale or hand-mangled artifact fails here;
+#            latency), and BENCH_attention.json (benchmarks/
+#            bench_attention.py) parses with the fused/unfused/vpu
+#            prefill+decode timings — a stale or hand-mangled artifact
+#            fails here;
 #   errbudget scripts/check_error_budget.py — fast fp64-oracle
 #            percent-error sweep over every reduce engine with hard
 #            per-engine ceilings (the precision subsystem's accuracy
@@ -103,6 +106,28 @@ if missing or bad:
         f"non-positive {bad} — regenerate with "
         f"PYTHONPATH=src:. python benchmarks/bench_serve.py")
 print("ok: BENCH_serve.json parses with", ", ".join(JSON_KEYS))
+PY
+
+echo "== attention bench artifact =="
+python - <<'PY'
+import json
+import sys
+
+sys.path.insert(0, "benchmarks")
+from bench_attention import JSON_KEYS
+
+with open("BENCH_attention.json") as f:
+    data = json.load(f)
+missing = [k for k in JSON_KEYS if k not in data]
+bad = [k for k in JSON_KEYS
+       if k in data and not (isinstance(data[k], (int, float))
+                             and data[k] > 0)]
+if missing or bad:
+    raise SystemExit(
+        f"FAIL: BENCH_attention.json missing keys {missing}, "
+        f"non-positive {bad} — regenerate with "
+        f"PYTHONPATH=src:. python benchmarks/bench_attention.py")
+print("ok: BENCH_attention.json parses with", ", ".join(JSON_KEYS))
 PY
 
 echo "== error budget =="

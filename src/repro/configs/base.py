@@ -116,6 +116,13 @@ class ModelConfig:
     onehot_embed: bool = False        # gather as one-hot ones-MMA matmul
     ce_vocab_chunk: int = 0           # online-logsumexp CE over vocab
     #                                   chunks (0 = full logits)
+    # attention engine routing (the `attention` op in core/dispatch.py):
+    # '' = legacy size heuristic (direct for decode/small, chunked for
+    # long prefill); 'auto' = autotuned; or an engine/alias name
+    # ('fused_pallas' | 'unfused_mma' | 'vpu' | 'pallas' | 'mma')
+    attn_method: str = ""
+    attn_precision: Optional[object] = None   # MmaPolicy for attention
+    attn_slo_ms: Optional[float] = None       # |lat: SLO objective
 
     @property
     def is_encdec(self) -> bool:

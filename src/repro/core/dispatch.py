@@ -74,6 +74,17 @@ class DispatchContext:
     #                                    multi-device mesh, mesh order;
     #                                    None on a single device
     policy: Optional[MmaPolicy] = None  # the call's precision policy
+    extras: Optional[tuple] = None  # op-family static facts as a
+    #                                 ((key, value), ...) tuple (hashable
+    #                                 — the attention family records its
+    #                                 mask/layout structure here)
+
+    def extra(self, key: str, default=None):
+        """Look up one op-family fact recorded in ``extras``."""
+        for k, v in self.extras or ():
+            if k == key:
+                return v
+        return default
 
     @property
     def ndim(self) -> int:
@@ -136,6 +147,10 @@ class EngineSpec:
     sweep: tuple = ()               # of 'chain'/'block_rows'/'split_words'
     max_split_words: int = 1        # split-bf16 words the engine runs
     accum_dtypes: tuple = ("float32",)  # accumulators it can honour
+    predicate: Optional[Callable] = None  # (ctx) -> reason-or-None;
+    #                                       op-family structural checks
+    #                                       beyond the shared flags
+    #                                       (reads ``ctx.extra(...)``)
 
 
 def capability_reason(eng: EngineSpec, ctx: DispatchContext, *,
@@ -160,7 +175,12 @@ def capability_reason(eng: EngineSpec, ctx: DispatchContext, *,
         return f"requires an ndim == {eng.ndim} input"
     if eng.dtypes is not None and ctx.dtype not in eng.dtypes:
         return f"dtype {ctx.dtype} not in {eng.dtypes}"
-    return _policy_reason(eng, ctx.policy)
+    reason = _policy_reason(eng, ctx.policy)
+    if reason is not None:
+        return reason
+    if eng.predicate is not None:
+        return eng.predicate(ctx)
+    return None
 
 
 def _policy_reason(eng: EngineSpec,
@@ -248,7 +268,8 @@ def op_spec(name: str) -> OpSpec:
 def build_context(op: str, x, *, axis=None, scan_axis=None,
                   multi_device: Optional[bool] = None,
                   mesh_axes: Optional[tuple] = None,
-                  policy: Optional[MmaPolicy] = None) -> DispatchContext:
+                  policy: Optional[MmaPolicy] = None,
+                  extras: Optional[tuple] = None) -> DispatchContext:
     if multi_device is None:
         if mesh_axes is None:
             mesh_axes = _live_mesh_axes()
@@ -256,7 +277,7 @@ def build_context(op: str, x, *, axis=None, scan_axis=None,
     return DispatchContext(
         op=op, shape=tuple(x.shape), dtype=jnp.dtype(x.dtype).name,
         multi_device=multi_device, axis=axis, scan_axis=scan_axis,
-        mesh_axes=mesh_axes, policy=policy)
+        mesh_axes=mesh_axes, policy=policy, extras=extras)
 
 
 def legal_engines(spec: OpSpec, ctx: DispatchContext) -> tuple:
@@ -502,8 +523,40 @@ def _context_for(spec: OpSpec, x, op_kwargs: dict, *,
         scan_axis = axis % max(x.ndim, 1)
         return build_context(spec.name, x, scan_axis=scan_axis,
                              policy=policy)
+    if spec.family == "attention":
+        return build_context(spec.name, x, policy=policy,
+                             extras=_attention_extras(x, op_kwargs))
     return build_context(spec.name, x, axis=op_kwargs.get("axis"),
                          policy=policy)
+
+
+def _attention_extras(qg, op_kwargs: dict) -> tuple:
+    """The attention family's static context facts.
+
+    Everything recorded here is trace-time shape/flag information —
+    never an operand array — so the context stays hashable and the
+    predicates stay jit-safe.  ``has_kv_len`` is True only for a
+    *dynamic* valid-length mask (the decode ring-buffer case); a static
+    ``kv_len == Sk`` is the dense no-op every engine handles.
+    """
+    k = op_kwargs.get("k")
+    v = op_kwargs.get("v")
+    qpos = op_kwargs.get("qpos")
+    kv_len = op_kwargs.get("kv_len")
+    window = op_kwargs.get("window")
+    kv_seq = int(k.shape[1]) if k is not None else 0
+    return (
+        ("causal", bool(op_kwargs.get("causal", False))),
+        ("window", int(window) if window is not None else None),
+        ("has_kv_len",
+         kv_len is not None
+         and not (isinstance(kv_len, int) and kv_len == kv_seq)),
+        ("per_row", qpos is not None and getattr(qpos, "ndim", 1) == 2),
+        ("head_dim", int(qg.shape[-1])),
+        ("v_head_dim",
+         int(v.shape[-1]) if v is not None else int(qg.shape[-1])),
+        ("kv_seq", kv_seq),
+    )
 
 
 # ===================================================== engine runners
@@ -679,6 +732,74 @@ def _segment_vpu(values, plan, *, segment_ids, num_segments, **_):
         num_segments=num_segments)
 
 
+# ---- attention family
+#
+# Operand surface (every runner): qg (B, Sq, KV, G, hd) grouped
+# queries; k (B, Sk, KV, hd); v (B, Sk, KV, hd_v — MLA's value width
+# may differ); qpos (Sq,) or per-row (B, Sq) absolute positions;
+# key positions are always 0..Sk-1 (the ring-buffer slot order).
+# Returns (B, Sq, KV, G, hd_v) in v.dtype.
+
+
+def _attn_scale(qg, scale):
+    return 1.0 / math.sqrt(qg.shape[-1]) if scale is None else scale
+
+
+def _attn_vpu(qg, plan, *, k, v, qpos, causal=False, window=None,
+              kv_len=None, scale=None, cap=None, **_):
+    from repro.models.attention import _direct_attn
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    return _direct_attn(qg, k, v, qpos=qpos, kpos=kpos, causal=causal,
+                        window=window, kv_len=kv_len,
+                        scale=_attn_scale(qg, scale), cap=cap)
+
+
+def _attn_unfused(qg, plan, *, k, v, qpos, causal=False, window=None,
+                  kv_len=None, scale=None, cap=None, chunk=None, **_):
+    # kv_len is None or statically the full Sk here (the capability
+    # predicate refuses the dynamic ring-buffer form), so the dense
+    # chunked scan's built-in kv_len == Sk bound is exact.
+    from repro.models.attention import _chunked_attn
+    chunk = int(chunk) if chunk else plan.chain * plan.block_rows
+    return _chunked_attn(qg, k, v, qpos=qpos, causal=causal,
+                         window=window, scale=_attn_scale(qg, scale),
+                         cap=cap, chunk=chunk)
+
+
+def _attn_fused(qg, plan, *, k, v, qpos, causal=False, window=None,
+                kv_len=None, scale=None, cap=None, **_):
+    from repro.kernels import mma_attention
+    return mma_attention(qg, k, v, qpos=qpos, causal=causal,
+                         window=window, kv_len=kv_len,
+                         scale=_attn_scale(qg, scale), cap=cap,
+                         chain=plan.chain, block_rows=plan.block_rows)
+
+
+# The fused kernel tiles one (padded) head dim across VMEM lanes; past
+# this width the f32 working set (scores + accumulator + row stats,
+# double-buffered) no longer fits the 16 MB budget.
+_FUSED_MAX_HEAD = 512
+
+
+def _attn_fused_predicate(ctx: DispatchContext) -> Optional[str]:
+    pad = max(int(ctx.extra("head_dim", 0)),
+              int(ctx.extra("v_head_dim", 0)))
+    pad = -(-max(pad, 1) // 128) * 128
+    if pad > _FUSED_MAX_HEAD:
+        return (f"padded head dim {pad} exceeds the fused kernel's "
+                f"{_FUSED_MAX_HEAD}-lane VMEM head tiling; use the "
+                f"unfused engines")
+    return None
+
+
+def _attn_unfused_predicate(ctx: DispatchContext) -> Optional[str]:
+    if ctx.extra("has_kv_len"):
+        return ("dense-prefill engine: the KV-chunked scan has no "
+                "dynamic valid-length (ring-buffer kv_len) mask; "
+                "decode needs the fused kernel or the vpu oracle")
+    return None
+
+
 # ================================================= reference oracles
 #
 # The classic baseline IS each op's semantic reference (the paper
@@ -712,6 +833,11 @@ def _ref_segment_sum(values, **kw):
     return _segment_vpu(values, None, **kw)
 
 
+def _ref_attention(qg, **kw):
+    kw.pop("chunk", None)
+    return _attn_vpu(qg, None, **kw)
+
+
 # ----------------------------------------------- measurement inputs
 #
 # Ops whose runners need more than one 1D operand declare how the
@@ -730,6 +856,55 @@ def _measure_expert_counts(n, dtype, rng):
     onehot = jnp.eye(e, dtype=jnp.float32)[
         jnp.asarray(rng.integers(0, e, t))]
     return onehot.astype(dtype), {}
+
+
+def _measure_attention(n, dtype, rng):
+    # A representative causal self-attention problem with ~n score
+    # elements (Sq == Sk == sqrt(n)): B = KV = G = 1 is enough — every
+    # engine batches the leading dims trivially.
+    hd = 64
+    s = max(int(math.isqrt(max(int(n), 1))), 8)
+    qg = jnp.asarray(rng.standard_normal((1, s, 1, 1, hd)),
+                     dtype=jnp.float32).astype(dtype)
+    k = jnp.asarray(rng.standard_normal((1, s, 1, hd)),
+                    dtype=jnp.float32).astype(dtype)
+    v = jnp.asarray(rng.standard_normal((1, s, 1, hd)),
+                    dtype=jnp.float32).astype(dtype)
+    return qg, {"k": k, "v": v,
+                "qpos": jnp.arange(s, dtype=jnp.int32),
+                "causal": True, "scale": 1.0 / math.sqrt(hd)}
+
+
+def _attention_cost(plan, n, dtype):
+    """Analytical score for the attention engines, in the autotuner's
+    model units (``n`` = score elements B*Sq*KV*G*Sk).
+
+    Every engine pays the same two MXU contractions per score element
+    (QK^T and PV); they differ in VPU passes over the score matrix and
+    grid overhead: the oracle materialises scores + a full softmax
+    (~5 passes + the HBM round-trip), the KV-chunked scan streams with
+    ~3 passes per chunk, and the fused kernel keeps the row statistics
+    in registers — one exp pass plus a max/sum fold that amortises
+    with the MMA chain, which is the whole point of the fusion
+    (ROADMAP open item 1).
+    """
+    from repro.core import autotune as at
+    n = max(int(n), 1)
+    par = at._PARALLELISM
+    mma = 2.0 * n / (at._MXU_THROUGHPUT * par)
+    vpass = n / (at._VPU_THROUGHPUT * par)
+    mem = n * jnp.dtype(dtype).itemsize / (4.0 * at._VPU_THROUGHPUT)
+    tile = max(plan.block_rows * plan.m, 1)
+    if plan.method == "vpu":
+        return mma + 5.0 * vpass + mem
+    if plan.method == "unfused_mma":
+        steps = max(math.ceil(n / tile), 1)
+        return mma + 3.0 * vpass \
+            + at._GRID_STEP_OVERHEAD * steps / par
+    # fused_pallas
+    steps = max(math.ceil(n / (max(plan.chain, 1) * tile)), 1)
+    return mma + (1.0 + 1.0 / max(plan.chain, 1)) * vpass \
+        + at._GRID_STEP_OVERHEAD * steps / par
 
 
 # ==================================================== registrations
@@ -832,3 +1007,38 @@ register(OpSpec(
         EngineSpec("vpu", _segment_vpu, multi_device_safe=True),
     ),
     aliases={"mma_chained": "mma"}, reference=_ref_segment_sum))
+
+# Attention engine capability summary:
+#   fused_pallas  flash-style Pallas kernel (kernels/mma_attention.py):
+#                 online-softmax row stats in-kernel via chained-MMA
+#                 max/sum folds with Kahan-carried f32 normalisers.
+#                 Handles causal/window/GQA, per-row decode positions
+#                 and the ring-buffer kv_len mask; head dims tile up to
+#                 _FUSED_MAX_HEAD lanes; f32/bf16 inputs only.
+#   unfused_mma   today's KV-chunked online-softmax scan
+#                 (models/attention._chunked_attn): dense prefill only
+#                 (no dynamic kv_len), any dtype, distribution-safe.
+#   vpu           the unchunked oracle (models/attention._direct_attn):
+#                 safe everywhere; materialises the score matrix.
+
+_ATTENTION_ENGINES = (
+    EngineSpec("fused_pallas", _attn_fused, ndim=5,
+               dtypes=("float32", "bfloat16"),
+               sweep=("chain", "block_rows"),
+               predicate=_attn_fused_predicate),
+    EngineSpec("unfused_mma", _attn_unfused, ndim=5,
+               multi_device_safe=True, sweep=("block_rows",),
+               predicate=_attn_unfused_predicate),
+    EngineSpec("vpu", _attn_vpu, ndim=5, multi_device_safe=True),
+)
+
+register(OpSpec(
+    name="attention", family="attention", engines=_ATTENTION_ENGINES,
+    aliases={"pallas": "fused_pallas", "mma": "unfused_mma"},
+    reference=_ref_attention,
+    # plan keys bucket on score elements, so prefill (Sq*Sk) and
+    # decode (1*Sk) land in different n-buckets and resolve distinct
+    # plans under one SLO — the PR-6 latency-objective contract.
+    size_of=lambda qg, kw: (qg.shape[0] * qg.shape[1] * qg.shape[2]
+                            * qg.shape[3] * kw["k"].shape[1]),
+    cost=_attention_cost, measure=_measure_attention))

@@ -4,6 +4,7 @@ Each kernel module contains the raw pl.pallas_call + BlockSpec code;
 ``ops`` exposes the jit'd public API; ``ref`` holds pure-jnp oracles.
 """
 
+from repro.kernels.mma_attention import mma_attention  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     mma_ec_reduce,
     mma_ec_squared_sum,

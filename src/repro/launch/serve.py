@@ -239,18 +239,44 @@ class ContinuousServer:
     scoring reductions (``logprobs=True``): admission scores
     prefill-shaped logits, the decode loop scores (num_slots, 1, V)
     logits, and each resolves its own ``|lat:``-keyed plan.
+
+    ``attn_method`` rebuilds the model with its attention routed
+    through the named registry engine (or ``'auto'``): prefill and the
+    per-step paged decode then share one code path — the decode step
+    dequantizes the paged store to a dense view and the fused kernel
+    masks ring-buffer slots past ``kv_len`` in-kernel.  The same
+    ``latency_slo_ms`` keys the attention plans, and prefill- vs
+    decode-shaped problems bucket to distinct plan keys.
     """
 
     def __init__(self, model, *, num_slots: int = 4, capacity: int = 128,
                  page_size: int = 16, quant: str = "none",
                  precision=None, mesh=None, temperature: float = 0.0,
                  latency_slo_ms: Optional[float] = None,
-                 logprobs: bool = False, seed: int = 0):
+                 logprobs: bool = False, seed: int = 0,
+                 attn_method: Optional[str] = None):
         cfg = model.cfg
         if cfg.is_encdec or cfg.vision_tokens:
             raise ValueError(
                 "ContinuousServer serves text decoders; enc-dec and "
                 "vision configs need per-request memory (use Server)")
+        if attn_method is not None:
+            # Route prefill and decode attention through the requested
+            # registry engine (e.g. 'fused_pallas' for the paged-decode
+            # fused kernel, or 'auto' under the same latency SLO that
+            # keys the scoring reductions).  The engines take whole
+            # (de)quantized KV tensors, so an attention-side policy
+            # never word-splits: cap split_words at 1 — the residual
+            # words belong to the KV store's quantizer, which keeps the
+            # caller's ``precision`` untouched.
+            attn_pol = precision
+            if attn_pol is not None and \
+                    getattr(attn_pol, "split_words", 1) != 1:
+                attn_pol = dataclasses.replace(attn_pol, split_words=1)
+            cfg = dataclasses.replace(
+                cfg, attn_method=attn_method, attn_precision=attn_pol,
+                attn_slo_ms=latency_slo_ms)
+            model = model_zoo.build(cfg)
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
@@ -426,6 +452,10 @@ def main():
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--quant", choices=("none", "int8"), default="none")
     ap.add_argument("--latency-slo-ms", type=float, default=None)
+    ap.add_argument("--attn-method", default=None,
+                    help="attention registry engine for the continuous "
+                         "engine (fused_pallas | unfused_mma | vpu | "
+                         "auto)")
     args = ap.parse_args()
 
     from repro.configs import registry
@@ -440,7 +470,8 @@ def main():
         eng = ContinuousServer(
             model, num_slots=args.num_slots, capacity=args.capacity,
             quant=args.quant, latency_slo_ms=args.latency_slo_ms,
-            logprobs=args.latency_slo_ms is not None)
+            logprobs=args.latency_slo_ms is not None,
+            attn_method=args.attn_method)
         reqs = [Request(uid=i, prompt=prompts[i], max_new=args.max_new)
                 for i in range(args.batch)]
         t0 = time.time()

@@ -94,13 +94,22 @@ def _expand_mask(m):
 
 def _direct_attn(qg, k, v, *, qpos, kpos, causal, window, kv_len,
                  scale, cap):
-    """Unchunked attention: qg (B,Sq,KV,G,hd), k/v (B,Sk,KV,hd)."""
+    """Unchunked attention: qg (B,Sq,KV,G,hd), k/v (B,Sk,KV,hd).
+
+    All-masked semantics: a query row whose mask admits no key yields
+    exactly zero output (softmax over an all-``NEG_INF`` row would
+    otherwise degenerate to a uniform average of ``v`` — finite
+    sentinel, so ``exp(s - max) == 1`` everywhere).  Every engine of
+    the ``attention`` op shares this convention, mirroring
+    ``masked_mean``'s all-masked -> 0 contract.
+    """
     s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k,
                    preferred_element_type=ACCUM_DTYPE) * scale
     s = L.softcap(s, cap)
-    m = _mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
-    s = jnp.where(_expand_mask(m), s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    m = _expand_mask(_mask(qpos, kpos, causal=causal, window=window,
+                           kv_len=kv_len))
+    s = jnp.where(m, s, NEG_INF)
+    p = jnp.where(m, jax.nn.softmax(s, axis=-1), 0.0)
     o = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(v.dtype), v,
                    preferred_element_type=ACCUM_DTYPE)
     return o.astype(v.dtype)
@@ -128,10 +137,14 @@ def _chunked_attn(qg, k, v, *, qpos, causal, window, scale, cap,
         s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k_i,
                        preferred_element_type=ACCUM_DTYPE) * scale
         s = L.softcap(s, cap)
-        valid = _mask(qpos, kp_i, causal=causal, window=window, kv_len=Sk)
-        s = jnp.where(_expand_mask(valid), s, NEG_INF)
+        valid = _expand_mask(_mask(qpos, kp_i, causal=causal,
+                                   window=window, kv_len=Sk))
+        s = jnp.where(valid, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[..., None])
+        # Masked entries are zeroed exactly: exp(NEG_INF - m) == 1 when
+        # the whole row so far is masked (m == NEG_INF, finite), which
+        # would otherwise leak a phantom count into the normaliser.
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
@@ -143,7 +156,12 @@ def _chunked_attn(qg, k, v, *, qpos, causal, window, scale, cap,
     l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
     a0 = jnp.zeros((B, KV, G, Sq, hd_v), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kp))
-    o = acc / jnp.maximum(l[..., None], 1e-37)
+    # A fully-masked query row has l == 0 exactly (every p zeroed
+    # above): emit exactly zero — the shared all-masked semantics (see
+    # _direct_attn) — instead of the uniform-average-of-v the old
+    # jnp.maximum(l, 1e-37) floor silently produced.
+    ln = l[..., None]
+    o = jnp.where(ln > 0.0, acc / jnp.where(ln > 0.0, ln, 1.0), 0.0)
     return o.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # (B,Sq,KV,G,hd)
 
 
@@ -182,6 +200,46 @@ def _banded_local_attn(qg, k, v, *, window: int, scale, cap):
     o = jnp.einsum("bkgnqc,bnckh->bnqkgh", p.astype(v2.dtype), v2,
                    preferred_element_type=ACCUM_DTYPE)
     return o.reshape(B, S, KV, G, hd_v).astype(v.dtype)
+
+
+_CFG_CAP = object()   # sentinel: take the softcap from the config
+
+
+def _registry_attn(cfg, qg, k, v, *, qpos, causal, window, kv_len,
+                   scale, decode, cap=_CFG_CAP):
+    """Route one attention problem through the TC-op registry.
+
+    ``cfg.attn_method`` picks the engine: the empty default keeps the
+    legacy size heuristic (direct oracle for decode/small problems,
+    KV-chunked online softmax for long prefill) but spells it as
+    explicit registry engines; ``'auto'`` hands the choice to the
+    autotuner under ``cfg.attn_precision`` (``MmaPolicy`` — its
+    ``error_budget_pct`` gates the fused kernel) and ``cfg.attn_slo_ms``
+    (the ``|lat:`` latency objective); any engine/alias name requests
+    that engine, falling back to the ``vpu`` oracle when its capability
+    predicates refuse the call (the stay-trainable policy —
+    ``repro.core.dispatch.resolve_method``).
+    """
+    from repro.core import dispatch
+    Sq = qg.shape[1]
+    method = getattr(cfg, "attn_method", "") or ""
+    if not method:
+        small = decode or Sq * k.shape[1] <= cfg.attn_chunk ** 2
+        method = "vpu" if small else "unfused_mma"
+    pol = getattr(cfg, "attn_precision", None)
+    if cap is _CFG_CAP:
+        cap = cfg.attn_softcap
+    kw = dict(k=k, v=v, qpos=qpos, causal=causal, window=window,
+              kv_len=kv_len, scale=scale, cap=cap,
+              chunk=cfg.attn_chunk)
+    if method != "auto":
+        method = dispatch.resolve_method("attention", qg, method,
+                                         fallback="vpu", precision=pol,
+                                         **kw)
+    return dispatch.dispatch("attention", qg, method=method,
+                             precision=pol,
+                             objective=getattr(cfg, "attn_slo_ms", None),
+                             **kw)
 
 
 def attention(params, cfg, x, *, positions, kind: str = "global",
@@ -319,14 +377,10 @@ def attention(params, cfg, x, *, positions, kind: str = "global",
     if banded:
         o = _banded_local_attn(qg, k, v, window=window, scale=scale,
                                cap=cfg.attn_softcap)
-    elif decode or Sq * k.shape[1] <= cfg.attn_chunk * cfg.attn_chunk:
-        o = _direct_attn(qg, k, v, qpos=positions, kpos=kpos,
-                         causal=causal, window=window, kv_len=kv_len,
-                         scale=scale, cap=cfg.attn_softcap)
     else:
-        o = _chunked_attn(qg, k, v, qpos=positions, causal=causal,
-                          window=window, scale=scale,
-                          cap=cfg.attn_softcap, chunk=cfg.attn_chunk)
+        o = _registry_attn(cfg, qg, k, v, qpos=positions, causal=causal,
+                           window=window, kv_len=kv_len, scale=scale,
+                           decode=decode)
     o = o.reshape(B, Sq, H, hd)
     if getattr(cfg, "bf16_activation_ar", False):
         # emit the row-parallel output dot natively in bf16 so the TP

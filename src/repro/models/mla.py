@@ -169,7 +169,7 @@ def mla_attention(params, cfg, x, *, positions, cache=None,
         o = jnp.einsum("bshr,rhk->bshk", ctx, params["wv_b"].astype(dt))
     else:
         # Expanded form: per-head K/V from the latent, flash-style attend.
-        from repro.models.attention import _chunked_attn, _direct_attn
+        from repro.models.attention import _registry_attn
         k_nope = jnp.einsum("bcr,rhk->bchk", ckv_new,
                             params["wk_b"].astype(dt))
         v = jnp.einsum("bcr,rhk->bchk", ckv_new, params["wv_b"].astype(dt))
@@ -180,15 +180,11 @@ def mla_attention(params, cfg, x, *, positions, cache=None,
         q = constrain(q, ("batch", None, "heads", "head_dim"))
         k = constrain(k, ("batch", None, "heads", "head_dim"))
         qg = q[:, :, :, None, :].reshape(B, Sq, H, 1, -1)
-        if Sq * Sq <= cfg.attn_chunk * cfg.attn_chunk:
-            o = _direct_attn(qg, k, v, qpos=positions,
-                             kpos=jnp.arange(Sq, dtype=jnp.int32),
-                             causal=True, window=None, kv_len=None,
-                             scale=scale, cap=None)
-        else:
-            o = _chunked_attn(qg, k, v, qpos=positions, causal=True,
-                              window=None, scale=scale, cap=None,
-                              chunk=cfg.attn_chunk)
+        # MLA never softcaps its expanded-form logits, so pin cap=None
+        # rather than inheriting cfg.attn_softcap.
+        o = _registry_attn(cfg, qg, k, v, qpos=positions, causal=True,
+                           window=None, kv_len=None, scale=scale,
+                           decode=False, cap=None)
         o = o.reshape(B, Sq, H, m.v_head_dim)
 
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))

@@ -46,6 +46,16 @@ def _op_inputs(op: str, dtype=jnp.float32, seed: int = 0):
         return x, {"segment_ids": ids, "num_segments": 37}
     if op in ("scan", "masked_cumsum"):
         return x, {"axis": -1, "inclusive": True}
+    if op == "attention":
+        # Small enough that the fused interpret-mode kernel stays fast,
+        # non-trivial on every axis: batch, GQA groups, KV heads.
+        def t(*shape):
+            return jnp.asarray(rng.normal(size=shape)
+                               .astype(np.float32)).astype(dtype)
+        return t(2, 24, 2, 2, 16), {
+            "k": t(2, 24, 2, 16), "v": t(2, 24, 2, 16),
+            "qpos": jnp.arange(24, dtype=jnp.int32),
+            "causal": True, "scale": 0.25}
     return x, {}
 
 
@@ -318,6 +328,49 @@ def test_multi_device_predicates_restrict_legal_set():
                                    scan_axis=0)
     assert dispatch.legal_engines(scan_spec, ctx) == \
         scan_spec.engine_names()
+
+
+def test_attention_capability_predicates(fresh_plan_registry):
+    """The attention engines' predicates gate on problem structure —
+    misrouting a decode (dynamic kv_len) problem onto the dense-prefill
+    engine, or an oversized head dim onto the fused kernel, is a
+    ``ValueError`` naming the reason, never a silent wrong answer."""
+    qg, kw = _op_inputs("attention")
+    spec = dispatch.op_spec("attention")
+    kv_len = jnp.asarray([5, 9], jnp.int32)   # dynamic per-row count
+    kw_dec = dict(kw, kv_len=kv_len)
+    with pytest.raises(ValueError, match="kv_len"):
+        dispatch.dispatch("attention", qg, method="unfused_mma",
+                          **kw_dec)
+    assert not dispatch.supported_method("attention", qg,
+                                         "unfused_mma", **kw_dec)
+    assert dispatch.resolve_method("attention", qg, "unfused_mma",
+                                   fallback="vpu", **kw_dec) == "vpu"
+    # a *static* full-length kv_len is dense prefill: still legal
+    assert dispatch.supported_method(
+        "attention", qg, "unfused_mma",
+        **dict(kw, kv_len=int(kw["k"].shape[1])))
+    # fused kernel refuses head dims past its VMEM lane tiling
+    rng = np.random.default_rng(2)
+    qh = jnp.asarray(rng.normal(size=(1, 8, 1, 1, 600))
+                     .astype(np.float32))
+    kw_hd = {"k": jnp.asarray(rng.normal(size=(1, 8, 1, 600))
+                              .astype(np.float32)),
+             "v": jnp.asarray(rng.normal(size=(1, 8, 1, 16))
+                              .astype(np.float32)),
+             "qpos": jnp.arange(8, dtype=jnp.int32), "causal": True}
+    with pytest.raises(ValueError, match="head dim"):
+        dispatch.dispatch("attention", qh, method="fused_pallas",
+                          **kw_hd)
+    # the auto path prunes to legal engines *before* planning: decode
+    # still matches the oracle and the plan key records the restriction
+    got = np.asarray(dispatch.dispatch("attention", qg, method="auto",
+                                       **kw_dec))
+    want = np.asarray(spec.reference(qg, **kw_dec), dtype=np.float64)
+    np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+    keys = [k for k, _ in autotune.default_registry().items()]
+    assert any(k.startswith("attention") and
+               k.endswith("|fused_pallas+vpu") for k in keys), keys
 
 
 def test_candidate_plans_follow_registry():
