@@ -1,7 +1,7 @@
 """Autotuner driver: emit the plan table the way bench_rb_sweep emits
 raw timings.
 
-Three sections, all CSV via benchmarks.common.emit:
+Four sections, all CSV via benchmarks.common.emit:
 
   autotune/plan/...      the winning ReductionPlan per (op, n, dtype)
                          under the analytical cost model (what a
@@ -11,18 +11,30 @@ Three sections, all CSV via benchmarks.common.emit:
                          the R-vs-block-size tension is visible;
   autotune/measured/...  a small measured sweep (wall-clock; Pallas
                          runs interpret=True on CPU) proving the
-                         measure path end-to-end.
+                         measure path end-to-end;
+  autotune/resolve/...   plan-resolution latency under a synthetic
+                         ragged stream of >= 64 distinct shapes:
+                         cold retune (registry miss -> model sweep)
+                         vs warm bucket hit (pow-2 bucketing collapses
+                         the stream onto a handful of caps), the
+                         fleet-scale story in one microbench.
 
 Run:  PYTHONPATH=src:. python benchmarks/bench_autotune.py
 It also writes the tuned registry to ``autotune_plans.json`` next to
-this file — the JSON form documented in README ("plan registry").
+this file — the JSON form documented in README ("plan registry") —
+and ``BENCH_autotune.json`` at the repo root (warm-hit-rate and
+resolve latencies; committed, parsed by ``scripts/check.sh``).
 """
 
 from __future__ import annotations
 
+import json
 import os
+import time
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.core import autotune
@@ -31,6 +43,65 @@ SIZES = [1 << 14, 1 << 17, 1 << 20]
 DTYPES = [jnp.float32, jnp.bfloat16]
 OPS = ["reduce_sum", "squared_sum"]
 MEASURE_N = 1 << 14   # small: every candidate times quickly in interpret
+
+# --- plan-resolution microbench (section 4) -------------------------
+# >= 64 distinct ragged sizes spanning [2^10, 2^17]: under the pow-2
+# bucket policy they collapse onto at most 8 caps, so the stream pays
+# at most 8 tuning events — the BENCH_autotune.json contract
+# scripts/check.sh enforces.
+RAGGED_COUNT = 64
+RAGGED_RANGE = (1 << 10, 1 << 17)
+
+JSON_KEYS = ("distinct_shapes", "tuning_events", "warm_hit_rate",
+             "cold_resolve_us", "warm_resolve_us")
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_autotune.json")
+
+
+def _ragged_sizes(k: int = RAGGED_COUNT, seed: int = 7) -> list:
+    rng = np.random.default_rng(seed)
+    sizes: set = set()
+    while len(sizes) < k:
+        sizes.add(int(rng.integers(RAGGED_RANGE[0],
+                                   RAGGED_RANGE[1] + 1)))
+    return sorted(sizes)
+
+
+def resolve_bench(write_json: bool = True) -> dict:
+    """Cold-retune vs warm-bucket-hit plan-resolution latency."""
+    sizes = _ragged_sizes()
+    reg = autotune.PlanRegistry()
+    cold_us, warm_us = [], []
+    for n in sizes:
+        key = autotune.plan_key("reduce_sum", n, jnp.float32)
+        miss = reg.get(key) is None
+        t0 = time.perf_counter()
+        autotune.get_plan(n, jnp.float32, registry=reg)
+        dt = (time.perf_counter() - t0) * 1e6
+        (cold_us if miss else warm_us).append(dt)
+    for n in sizes:                     # steady-state warm pass
+        t0 = time.perf_counter()
+        autotune.get_plan(n, jnp.float32, registry=reg)
+        warm_us.append((time.perf_counter() - t0) * 1e6)
+    events = len(cold_us)
+    out = {
+        "distinct_shapes": len(sizes),
+        "tuning_events": events,
+        "warm_hit_rate": 1.0 - events / len(sizes),
+        "cold_resolve_us": float(np.mean(cold_us)),
+        "warm_resolve_us": float(np.mean(warm_us)),
+        "bucket": "pow2",
+        "backend": jax.default_backend(),
+    }
+    emit("autotune/resolve/cold", out["cold_resolve_us"],
+         f"tuning_events={events};shapes={len(sizes)}")
+    emit("autotune/resolve/warm", out["warm_resolve_us"],
+         f"hit_rate={out['warm_hit_rate']:.3f}")
+    if write_json:
+        with open(_JSON_PATH, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return out
 
 
 def _fmt(plan: autotune.ReductionPlan) -> str:
@@ -64,6 +135,9 @@ def run():
                                    iters=3, warmup=1)
         emit(f"autotune/measured/n={MEASURE_N}/{cand.method}"
              f"/R={cand.chain}/B={cand.block_rows}", us, "wall-clock")
+
+    # 4. plan-resolution latency: cold retune vs warm bucket hit.
+    resolve_bench()
 
     out = os.path.join(os.path.dirname(__file__), "autotune_plans.json")
     reg.save(out)

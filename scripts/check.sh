@@ -38,6 +38,14 @@
 #            bench_attention.py) parses with the fused/unfused/vpu
 #            prefill+decode timings — a stale or hand-mangled artifact
 #            fails here;
+#   atomicio structural guard: src/repro/core/autotune.py must not
+#            contain a raw `open(..., 'w')` write — the plan store is
+#            written only via the atomic temp-file + os.replace path
+#            (a grep hit means a torn-write risk crept back in);
+#   autobench BENCH_autotune.json (benchmarks/bench_autotune.py)
+#            parses with the plan-resolution keys, >= 64 distinct
+#            ragged shapes resolved with <= 8 tuning events (the
+#            bucketed-plan-store warm-hit contract);
 #   errbudget scripts/check_error_budget.py — fast fp64-oracle
 #            percent-error sweep over every reduce engine with hard
 #            per-engine ceilings (the precision subsystem's accuracy
@@ -128,6 +136,48 @@ if missing or bad:
         f"non-positive {bad} — regenerate with "
         f"PYTHONPATH=src:. python benchmarks/bench_attention.py")
 print("ok: BENCH_attention.json parses with", ", ".join(JSON_KEYS))
+PY
+
+echo "== atomic plan-store writes =="
+if grep -nE "open\([^)]*['\"]w" src/repro/core/autotune.py; then
+    echo "FAIL: raw open(..., 'w') write in core/autotune.py — the" \
+         "plan store must be written via the atomic temp-file +" \
+         "os.replace path (_atomic_write)" >&2
+    exit 1
+fi
+echo "ok: plan store writes only through the atomic replace path"
+
+echo "== autotune bench artifact =="
+python - <<'PY'
+import json
+import sys
+
+sys.path.insert(0, "benchmarks")
+from bench_autotune import JSON_KEYS
+
+with open("BENCH_autotune.json") as f:
+    data = json.load(f)
+missing = [k for k in JSON_KEYS if k not in data]
+bad = [k for k in JSON_KEYS
+       if k in data and not (isinstance(data[k], (int, float))
+                             and data[k] > 0)]
+if missing or bad:
+    raise SystemExit(
+        f"FAIL: BENCH_autotune.json missing keys {missing}, "
+        f"non-positive {bad} — regenerate with "
+        f"PYTHONPATH=src:. python benchmarks/bench_autotune.py")
+if data["distinct_shapes"] < 64:
+    raise SystemExit("FAIL: plan-resolution bench covered "
+                     f"{data['distinct_shapes']} shapes (< 64)")
+if data["tuning_events"] > 8:
+    raise SystemExit(
+        f"FAIL: {data['tuning_events']} tuning events for "
+        f"{data['distinct_shapes']} ragged shapes (> 8) — bucketing "
+        f"is not collapsing the stream")
+print("ok: BENCH_autotune.json parses;",
+      f"{data['distinct_shapes']} shapes -> "
+      f"{data['tuning_events']} tuning events "
+      f"(warm-hit rate {data['warm_hit_rate']:.3f})")
 PY
 
 echo "== error budget =="

@@ -50,16 +50,25 @@ partial, and ``repro.distributed.tc_collectives`` folds them with the
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import json
 import math
 import os
+import queue
 import re
+import tempfile
+import threading
 import time
-from typing import Iterator, Optional
+from typing import Callable, Iterator, Optional
 
 import jax
+
+try:  # POSIX advisory file locking; absent on some platforms.
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX host
+    fcntl = None
 
 from repro.core import theory
 
@@ -122,6 +131,83 @@ class ReductionPlan:
 def bucket_n(n: int) -> int:
     """Round n up to a power of two — the plan-cache granularity."""
     return 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+
+
+# ---------------------------------------------------- bucket policies
+#
+# A bucket policy maps a problem size n onto the *bucket cap* the plan
+# is tuned — and keyed — at, so one tuned plan serves every shape in
+# its bucket.  Correctness contract: every policy's cap is monotone in
+# n and >= n, the engine-capability predicates (repro.core.dispatch
+# ``capability_reason``) depend only on op/engine/policy — never on n —
+# so a plan that is engine-legal at the cap is engine-legal across the
+# bucket, and the error model's accumulation term grows with n
+# (~eps*sqrt(n)), so a plan whose error meets ``error_budget_pct`` at
+# the cap meets it for every smaller n in the bucket.
+
+
+def _cap_pow2(n: int) -> int:
+    return bucket_n(n)
+
+
+def _cap_geom(n: int, m: int = DEFAULT_M) -> int:
+    # Paper-geometry alignment: a chained block folds multiples of the
+    # m x m MXU tile, and a full block pass folds m^2 elements (Eq. 5's
+    # R*m^2 block coverage).  Caps are m^2-aligned above one block pass
+    # and m-aligned below, so the tuned tile geometry divides the cap
+    # evenly — Dakkak et al.'s per-segment-size-class tuning, with the
+    # class boundaries on the paper's tile sizes instead of octaves.
+    n = max(int(n), 1)
+    if n <= m:
+        return m
+    if n <= m * m:
+        return math.ceil(n / m) * m
+    return math.ceil(n / (m * m)) * (m * m)
+
+
+# Named bucket policies.  ``None`` (not in this table) opts out of
+# bucketing entirely: exact-n keys, one plan per exact shape.
+BUCKETS: dict[str, Callable[[int], int]] = {
+    "pow2": _cap_pow2,
+    "geom": _cap_geom,
+}
+
+# bucket argument: a policy name from BUCKETS, or None for exact keys.
+BucketArg = Optional[str]
+
+DEFAULT_BUCKET = "pow2"
+
+
+def bucket_cap(n: int, bucket: BucketArg = DEFAULT_BUCKET) -> int:
+    """The bucket cap ``n`` belongs to under ``bucket`` — the size the
+    plan is tuned and keyed at.  ``bucket=None`` returns n itself
+    (exact keys, no sharing); unknown policy names raise."""
+    n = max(int(n), 1)
+    if bucket is None:
+        return n
+    try:
+        fn = BUCKETS[bucket]
+    except KeyError:
+        raise ValueError(
+            f"unknown bucket policy {bucket!r} (known: "
+            f"{sorted(BUCKETS)} or None for exact keys)") from None
+    return fn(n)
+
+
+def bucket_floor(n: int, bucket: BucketArg = DEFAULT_BUCKET) -> int:
+    """Smallest size sharing ``n``'s bucket (the cap's lower boundary).
+    With ``bucket=None`` every bucket is the single size n."""
+    cap = bucket_cap(n, bucket)
+    if bucket is None or cap <= 1:
+        return cap
+    lo, hi = 1, cap
+    while lo < hi:  # first k with bucket_cap(k) == cap (caps monotone)
+        mid = (lo + hi) // 2
+        if bucket_cap(mid, bucket) >= cap:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
 
 
 # engine restriction: None = all engines; a method name = just that
@@ -281,10 +367,20 @@ def _lat_tag(objective: ObjectiveArg) -> str:
 def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
              engine: Engine = None, mesh: MeshArg = None,
              policy: PolicyArg = None,
-             objective: ObjectiveArg = None) -> str:
+             objective: ObjectiveArg = None,
+             bucket: BucketArg = DEFAULT_BUCKET) -> str:
     """Registry key: op|n-bucket|dtype|backend[|engine][|prec:sig]
     [|lat:sig][|mesh:sig] (a flat string so the registry
     JSON-serialises as a plain object).
+
+    The second field is the **bucket cap** ``bucket_cap(n, bucket)``:
+    the size the plan was tuned at, which serves every n in its bucket.
+    The bucket policy changes only this field — suffix grammar and
+    ordering (engine < ``|prec:`` < ``|lat:`` < ``|mesh:``) are
+    policy-independent — so two policies mapping a shape to the same
+    cap share one tuned plan (by design: the plan depends only on the
+    size it was tuned at), and ``bucket=None`` writes the exact n
+    (which for a cap-aligned n is bit-for-bit the default pow-2 key).
 
     The engine suffix appears only for engine-restricted tunes (e.g.
     the tc_reduce / mma_reduce 'auto' spellings), so a per-engine
@@ -303,7 +399,8 @@ def plan_key(op: str, n: int, dtype, backend: Optional[str] = None,
     it never collides with the single-device plan for the same n."""
     if backend is None:
         backend = jax.default_backend()
-    return (f"{op}|{bucket_n(n)}|{jax.numpy.dtype(dtype).name}|{backend}"
+    return (f"{op}|{bucket_cap(n, bucket)}"
+            f"|{jax.numpy.dtype(dtype).name}|{backend}"
             f"{_engine_tag(engine)}{_prec_tag(policy)}"
             f"{_lat_tag(objective)}{_mesh_tag(mesh)}")
 
@@ -726,52 +823,203 @@ def execute_plan(x, plan: ReductionPlan, *, op: str = "reduce_sum",
 
 # ----------------------------------------------------------- registry
 
+# On-disk schema version.  Version 1 wraps the plan table as
+# {"version": 1, "plans": {key: plan-dict}}; the legacy (pre-version)
+# form was the bare plan table and still loads.  A file written by a
+# FUTURE schema is refused with a clear error instead of being
+# half-parsed: a fleet rolls registry schema forward with its code.
+SCHEMA_VERSION = 1
+
+
+@contextlib.contextmanager
+def _store_lock(path: str, shared: bool = False):
+    """Advisory file lock on ``<path>.lock`` serialising cross-process
+    store writes (no-op where ``fcntl`` is unavailable).  A sidecar
+    lock file keeps the store itself atomically replaceable."""
+    if fcntl is None:  # pragma: no cover - non-POSIX host
+        yield
+        return
+    fd = os.open(path + ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_SH if shared else fcntl.LOCK_EX)
+        yield
+    finally:
+        fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
+
+
+def _atomic_write(path: str, text: str) -> None:
+    """Write-to-temp + ``os.replace``: readers only ever see a complete
+    store, even if a writer dies mid-write."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    tmp = tempfile.NamedTemporaryFile(
+        "w", dir=d, prefix=os.path.basename(path) + ".",
+        suffix=".tmp", delete=False)
+    try:
+        with tmp:
+            tmp.write(text)
+            tmp.flush()
+            os.fsync(tmp.fileno())
+        os.replace(tmp.name, path)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp.name)
+        raise
+
+
+def _prefer_incoming(ours: ReductionPlan,
+                     theirs: ReductionPlan) -> bool:
+    """Merge rule: measured evidence beats the analytical model; among
+    equals, a cheaper plan (better tuned winner) beats a dearer one."""
+    rank = {"model": 0, "measured": 1}
+    ro, rt = rank.get(ours.source, 0), rank.get(theirs.source, 0)
+    if rt != ro:
+        return rt > ro
+    return theirs.cost < ours.cost
+
 
 class PlanRegistry:
-    """In-memory plan cache with JSON persistence.
+    """Thread-safe in-memory plan cache over a shareable on-disk store.
 
-    The JSON form is a flat object {key: plan-dict} (see ``plan_key``
-    for the key grammar) so tuned tables can be shipped with a model
-    config or diffed in review.
+    The JSON form is ``{"version": 1, "plans": {key: plan-dict}}``
+    (see ``plan_key`` for the key grammar) so tuned tables can be
+    shipped with a model config or diffed in review; the legacy bare
+    ``{key: plan-dict}`` form still loads.  ``save`` is crash- and
+    concurrency-safe: an advisory file lock serialises writers, the
+    on-disk table is merged in before writing (two processes tuning
+    disjoint shapes both survive), and the write itself is
+    write-to-temp + ``os.replace`` so readers never see a torn file.
+    ``sweep_worker`` optionally holds a ``SweepWorker`` that
+    ``get_plan`` hands model-cost resolutions to for background
+    measured upgrade.
     """
 
-    def __init__(self):
+    def __init__(self, path: Optional[str] = None):
         self._plans: dict[str, ReductionPlan] = {}
+        self._mu = threading.Lock()
+        self.path = path
+        self.sweep_worker: Optional["SweepWorker"] = None
 
     def get(self, key: str) -> Optional[ReductionPlan]:
         return self._plans.get(key)
 
     def put(self, key: str, plan: ReductionPlan) -> None:
-        self._plans[key] = plan
+        with self._mu:
+            self._plans[key] = plan
 
     def items(self):
-        return sorted(self._plans.items())
+        with self._mu:
+            return sorted(self._plans.items())
 
     def clear(self) -> None:
-        self._plans.clear()
+        with self._mu:
+            self._plans.clear()
 
     def __len__(self) -> int:
         return len(self._plans)
 
+    def merge(self, other: "PlanRegistry") -> int:
+        """Adopt ``other``'s entries: absent keys always, conflicting
+        keys per the merge rule (measured beats model, then lower
+        cost).  Returns the number of entries adopted."""
+        adopted = 0
+        for key, theirs in other.items():
+            with self._mu:
+                ours = self._plans.get(key)
+                if ours is None or _prefer_incoming(ours, theirs):
+                    self._plans[key] = theirs
+                    adopted += 1
+        return adopted
+
+    def mesh_signatures(self) -> tuple:
+        """Every distinct ``|mesh:`` signature keyed in the registry,
+        sorted — what an elastic-remesh invalidation scans."""
+        sigs = set()
+        for key, _ in self.items():
+            if "|mesh:" in key:
+                sigs.add(key.rsplit("|mesh:", 1)[1])
+        return tuple(sorted(sigs))
+
+    def invalidate_mesh(self, mesh: MeshArg) -> tuple:
+        """Drop every plan keyed to mesh signature ``mesh`` (a
+        signature string, or anything ``mesh_signature`` accepts).
+        Plans tuned for a dead mesh geometry must not serve the new
+        mesh — the next ``method='auto'`` call under the new mesh
+        resolves (and tunes) a fresh ``|mesh:`` key.  Returns the
+        removed keys, sorted."""
+        sig = mesh if isinstance(mesh, str) else mesh_signature(mesh)
+        if not sig:
+            return ()
+        suffix = f"|mesh:{sig}"
+        with self._mu:
+            dead = sorted(k for k in self._plans
+                          if k.endswith(suffix))
+            for k in dead:
+                del self._plans[k]
+        return tuple(dead)
+
     def to_json(self) -> str:
-        return json.dumps({k: p.to_dict() for k, p in self.items()},
-                          indent=2, sort_keys=True)
+        return json.dumps(
+            {"version": SCHEMA_VERSION,
+             "plans": {k: p.to_dict() for k, p in self.items()}},
+            indent=2, sort_keys=True)
 
     @classmethod
     def from_json(cls, text: str) -> "PlanRegistry":
+        data = json.loads(text)
+        if "version" in data or "plans" in data:
+            version = data.get("version")
+            if not isinstance(version, int):
+                raise ValueError(
+                    f"plan-store schema: 'plans' present but "
+                    f"'version' is {version!r} (expected an int)")
+            if version > SCHEMA_VERSION:
+                raise ValueError(
+                    f"plan store was written by schema version "
+                    f"{version}, but this build reads at most "
+                    f"{SCHEMA_VERSION} — upgrade the code or "
+                    f"regenerate the store with this build")
+            table = data["plans"]
+        else:
+            table = data  # legacy bare {key: plan-dict} form
         reg = cls()
-        for k, d in json.loads(text).items():
+        for k, d in table.items():
             reg.put(k, ReductionPlan.from_dict(d))
         return reg
 
-    def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            f.write(self.to_json())
+    def save(self, path: Optional[str] = None) -> None:
+        """Atomically persist, merging the current on-disk table in
+        first so concurrent writers lose nothing."""
+        path = path if path is not None else self.path
+        if not path:
+            raise ValueError(
+                "PlanRegistry.save: no path given and none bound "
+                "(pass path= or construct with PlanRegistry(path))")
+        with _store_lock(path):
+            if os.path.exists(path):
+                self.merge(PlanRegistry.load(path))
+            self._atomic_save(path)
+        self.path = self.path or path
+
+    def _atomic_save(self, path: str) -> None:
+        _atomic_write(path, self.to_json())
 
     @classmethod
     def load(cls, path: str) -> "PlanRegistry":
         with open(path) as f:
-            return cls.from_json(f.read())
+            reg = cls.from_json(f.read())
+        reg.path = path
+        return reg
+
+    def reload(self) -> int:
+        """Merge the bound store file back into memory — how a serving
+        process picks up plans tuned by its fleet peers.  Returns the
+        number of entries adopted (0 when unbound or absent)."""
+        if not self.path or not os.path.exists(self.path):
+            return 0
+        with _store_lock(self.path, shared=True):
+            disk = PlanRegistry.load(self.path)
+        return self.merge(disk)
 
 
 _default_registry: Optional[PlanRegistry] = None
@@ -790,27 +1038,52 @@ def default_registry() -> PlanRegistry:
     return _default_registry
 
 
+def bind_default_registry(path: str) -> PlanRegistry:
+    """Bind the process-wide registry to a shared store file: merge the
+    file in if it exists (plans tuned by fleet peers), and make
+    ``save()`` / ``reload()`` default to it.  Returns the registry."""
+    reg = default_registry()
+    reg.path = path
+    reg.reload()
+    return reg
+
+
 def reset_default_registry() -> None:
-    """Drop the process-wide cache (tests / re-tuning)."""
+    """Drop the process-wide cache (tests / re-tuning), closing any
+    attached background sweep worker first."""
     global _default_registry
+    if _default_registry is not None and \
+            _default_registry.sweep_worker is not None:
+        _default_registry.sweep_worker.close()
     _default_registry = None
 
 
 # ----------------------------------------------------------- autotune
 
 
+class SweepCancelled(RuntimeError):
+    """Raised by ``autotune`` when its ``cancel`` predicate fires —
+    how a background sweep worker abandons an in-flight measured
+    sweep at a candidate boundary during shutdown."""
+
+
 def autotune(n: int, dtype, *, op: str = "reduce_sum",
              measure: bool = False, chains=CHAINS, blocks=BLOCK_ROWS,
              m: int = DEFAULT_M, engine: Engine = None,
              mesh: MeshArg = None, policy: PolicyArg = None,
-             objective: ObjectiveArg = None) -> ReductionPlan:
+             objective: ObjectiveArg = None,
+             bucket: BucketArg = DEFAULT_BUCKET,
+             cancel=None) -> ReductionPlan:
     """Sweep the candidate space for one problem and return the winner.
 
     ``measure=False`` (default, and the only mode that is deterministic
     and hardware-free) scores with the analytical model; ``measure=True``
     times each candidate on the live backend.  ``engine`` restricts the
     sweep (per-engine geometry tuning).  The sweep is bucketed — score
-    at the bucket size so every n in the octave gets the same plan.
+    at ``bucket_cap(n, bucket)`` so every n in the bucket gets the same
+    plan, and the cap's error score bounds the whole bucket (the error
+    model's accumulation term grows with n); ``bucket=None`` tunes at
+    the exact n.
 
     With ``mesh`` the sweep tunes the **local per-device chain
     geometry** of a size-n *global* problem: candidates are enumerated
@@ -845,14 +1118,14 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
     """
     axes = mesh_axes(mesh)
     objective = as_objective(objective)
-    nb = bucket_n(n)
+    nb = bucket_cap(n, bucket)
     # Local per-device shard of the bucketed global problem.  The
     # measured size is the bucket rounded UP to a device-count
     # multiple, so non-power-of-two meshes (data=3, ...) shard evenly
     # and the timed shard matches the enumerated geometry.
     need = 1 if axes is None else math.prod(s for _, s in axes)
     local = max(math.ceil(nb / need), 1)
-    local_nb = nb if axes is None else bucket_n(local)
+    local_nb = nb if axes is None else bucket_cap(local, bucket)
     measure_nb = nb if axes is None else local * need
     combine = combine_model_cost(axes)
     budget = None if policy is None else policy.error_budget_pct
@@ -865,6 +1138,12 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
     for cand in candidate_plans(local_nb, dtype, chains=chains,
                                 blocks=blocks, m=m, engine=engine,
                                 op=op, policy=policy):
+        if cancel is not None and cancel():
+            # Bail at a candidate boundary (``cancel`` is how the
+            # background SweepWorker abandons a sweep on shutdown —
+            # a wedged measured sweep must not outlive close()).
+            raise SweepCancelled(
+                f"autotune sweep for op={op!r} n={n} cancelled")
         if measure:
             cost = measure_cost(cand, measure_nb, dtype, op=op,
                                 mesh=axes)
@@ -905,13 +1184,21 @@ def get_plan(n: int, dtype, *, op: str = "reduce_sum",
              registry: Optional[PlanRegistry] = None,
              measure: bool = False, engine: Engine = None,
              mesh: MeshArg = None, policy: PolicyArg = None,
-             objective: ObjectiveArg = None) -> ReductionPlan:
+             objective: ObjectiveArg = None,
+             bucket: BucketArg = DEFAULT_BUCKET) -> ReductionPlan:
     """Cached plan lookup — the entry point of ``method='auto'``.
 
     Registry hit: return it (a model-mode entry is re-tuned and
     replaced when ``measure=True`` asks for wall-clock evidence).
     Miss: run ``autotune`` once for the (op, n-bucket, dtype, backend
-    [, engine][, prec][, lat][, mesh]) key and cache the winner.
+    [, engine][, prec][, lat][, mesh]) key and cache the winner — the
+    n-bucket is ``bucket_cap(n, bucket)``, so under the default pow-2
+    policy one tuned plan serves every n in its octave and an exact
+    tune is an explicit ``bucket=None`` opt-out.  A cold miss NEVER
+    blocks on a measured sweep: the model-cost winner is returned
+    immediately, and when the registry has a ``sweep_worker`` attached
+    the key is queued for a background measured sweep that swaps in
+    the wall-clock winner off the hot path.
     ``mesh`` keys (and tunes) the plan for the local shard of a size-n
     global problem under that mesh shape — the mesh-collective path
     (``repro.distributed.tc_collectives``) and the auto path under a
@@ -928,17 +1215,176 @@ def get_plan(n: int, dtype, *, op: str = "reduce_sum",
     """
     reg = registry if registry is not None else default_registry()
     key = plan_key(op, n, dtype, backend, engine, mesh, policy,
-                   objective)
+                   objective, bucket)
     plan = reg.get(key)
-    if plan is not None and not (measure and plan.source != "measured"):
-        return plan
-    if measure and backend is not None \
-            and backend != jax.default_backend():
-        raise ValueError(
-            f"cannot measure for backend {backend!r} on a "
-            f"{jax.default_backend()!r} host; use the analytical model "
-            f"(measure=False) or tune on the target hardware")
-    plan = autotune(n, dtype, op=op, measure=measure, engine=engine,
-                    mesh=mesh, policy=policy, objective=objective)
-    reg.put(key, plan)
+    if plan is None or (measure and plan.source != "measured"):
+        if measure and backend is not None \
+                and backend != jax.default_backend():
+            raise ValueError(
+                f"cannot measure for backend {backend!r} on a "
+                f"{jax.default_backend()!r} host; use the analytical "
+                f"model (measure=False) or tune on the target hardware")
+        plan = autotune(n, dtype, op=op, measure=measure, engine=engine,
+                        mesh=mesh, policy=policy, objective=objective,
+                        bucket=bucket)
+        reg.put(key, plan)
+    if plan.source != "measured" and reg.sweep_worker is not None \
+            and backend in (None, jax.default_backend()):
+        reg.sweep_worker.submit(
+            key, dict(n=n, dtype=dtype, op=op, engine=engine,
+                      mesh=mesh, policy=policy, objective=objective,
+                      bucket=bucket))
     return plan
+
+
+# ------------------------------------------- warmup & background sweeps
+
+
+def warmup(ops, shapes, *, dtype=None, registry=None, measure=False,
+           backend=None, engine=None, mesh=None, policy=None,
+           objective=None, bucket=DEFAULT_BUCKET) -> dict:
+    """Pre-resolve the serving hot set so live traffic never tunes.
+
+    ``ops`` is an op name or an iterable of them; ``shapes`` an
+    iterable of sizes (or ``(n, dtype)`` pairs — the bare ``dtype``
+    argument, default float32, covers the rest).  Every (op, shape)
+    pair is resolved through ``get_plan`` under the given bucket
+    policy, so shapes collapsing onto one bucket cap tune at most
+    once.  Returns ``{"resolved", "tuned", "keys"}`` — ``tuned``
+    counts the actual tuning events (registry misses), the number the
+    fleet-scale story wants near the bucket count, not the shape
+    count.
+    """
+    reg = registry if registry is not None else default_registry()
+    base_dtype = jax.numpy.float32 if dtype is None else dtype
+    if isinstance(ops, str):
+        ops = (ops,)
+    tuned = 0
+    keys: dict[str, None] = {}
+    for op in ops:
+        for shape in shapes:
+            n, dt = shape if isinstance(shape, tuple) \
+                else (shape, base_dtype)
+            key = plan_key(op, n, dt, backend, engine, mesh, policy,
+                           objective, bucket)
+            if reg.get(key) is None:
+                tuned += 1
+            get_plan(n, dt, op=op, backend=backend, registry=reg,
+                     measure=measure, engine=engine, mesh=mesh,
+                     policy=policy, objective=objective, bucket=bucket)
+            keys[key] = None
+    return {"resolved": len(keys), "tuned": tuned,
+            "keys": tuple(keys)}
+
+
+class SweepWorker:
+    """Background measured-sweep upgrader for model-cost plans.
+
+    ``get_plan`` serves a cold miss from the analytical model
+    immediately and — when a worker is attached to the registry
+    (``registry.sweep_worker = worker``) — submits the key here; the
+    worker re-tunes it with ``measure=True`` off the hot path and
+    swaps the wall-clock winner into the registry.  The lifecycle
+    follows the ``data/pipeline.py`` prefetch pattern: the worker loop
+    uses timed queue gets that re-check the stop event, submissions
+    are non-blocking (a full queue drops the upgrade — it will be
+    resubmitted on the next model-plan serve), and ``close()`` sets
+    the stop flag, drains the queue, and joins with a timeout, so a
+    server shutdown can never deadlock on an in-flight sweep.
+    """
+
+    def __init__(self, registry=None, *, max_pending: int = 256,
+                 iters: int = 3, poll_s: float = 0.1):
+        self._registry = registry
+        self._iters = iters
+        self._poll_s = poll_s
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._stop = threading.Event()
+        self._inflight: set[str] = set()
+        self._mu = threading.Lock()
+        self.upgraded = 0
+        self.failed = 0
+        self._thread = threading.Thread(
+            target=self._run, name="autotune-sweep", daemon=True)
+        self._thread.start()
+
+    def _reg(self) -> PlanRegistry:
+        return self._registry if self._registry is not None \
+            else default_registry()
+
+    def submit(self, key: str, spec: dict) -> bool:
+        """Queue ``key`` for a measured upgrade (non-blocking; dedupes
+        in-flight keys).  ``spec`` holds the ``autotune`` kwargs that
+        produced the model plan.  Returns whether the key was queued."""
+        if self._stop.is_set():
+            return False
+        with self._mu:
+            if key in self._inflight:
+                return False
+            self._inflight.add(key)
+        try:
+            self._q.put_nowait((key, spec))
+            return True
+        except queue.Full:
+            with self._mu:
+                self._inflight.discard(key)
+            return False
+
+    def pending(self) -> int:
+        with self._mu:
+            return len(self._inflight)
+
+    def drain(self, timeout_s: float = 30.0) -> bool:
+        """Block (tests / warmup barriers) until every submitted key
+        has been swept or ``timeout_s`` passes."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            if not self.pending():
+                return True
+            time.sleep(self._poll_s / 2)
+        return not self.pending()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                key, spec = self._q.get(timeout=self._poll_s)
+            except queue.Empty:
+                continue
+            try:
+                reg = self._reg()
+                current = reg.get(key)
+                if current is not None and current.source == "measured":
+                    continue  # a peer already upgraded it
+                spec = dict(spec)
+                n, dtype = spec.pop("n"), spec.pop("dtype")
+                plan = autotune(n, dtype, measure=True,
+                                cancel=self._stop.is_set, **spec)
+                reg.put(key, plan)
+                self.upgraded += 1
+            except SweepCancelled:
+                pass  # shutdown raced the sweep; model plan keeps serving
+            except Exception:
+                # Best-effort: a failed sweep (e.g. a mesh plan on a
+                # host without that mesh) keeps the model plan serving.
+                self.failed += 1
+            finally:
+                with self._mu:
+                    self._inflight.discard(key)
+
+    def close(self, timeout_s: float = 5.0) -> None:
+        """Idempotent shutdown: stop, drain the queue, join."""
+        self._stop.set()
+        while True:
+            try:
+                key, _ = self._q.get_nowait()
+            except queue.Empty:
+                break
+            with self._mu:
+                self._inflight.discard(key)
+        self._thread.join(timeout=timeout_s)
+
+    def __enter__(self) -> "SweepWorker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -303,7 +303,7 @@ def known_method(op: str, method: str) -> bool:
 
 def local_plan(op: str, n: int, dtype, method: str = "auto", *,
                mesh=None, chain: int = 4, precision=None,
-               objective=None):
+               objective=None, bucket: str = "pow2"):
     """Resolve a method spelling to an executable plan for a size-n
     problem WITHOUT running it — how the mesh-collective layer
     (``repro.distributed.tc_collectives``) picks the per-device
@@ -313,7 +313,9 @@ def local_plan(op: str, n: int, dtype, method: str = "auto", *,
     given — the plan is tuned for the local shard of the size-n global
     problem; precision-keyed and error-budget-constrained when
     ``precision`` carries a policy; latency-keyed and SLO-selected
-    when ``objective`` carries one); an explicit spelling resolves
+    when ``objective`` carries one; keyed at the ``bucket`` policy's
+    cap — ``repro.core.autotune.bucket_cap`` — with ``bucket=None``
+    the exact-key opt-out); an explicit spelling resolves
     through the op's aliases to a one-engine plan with the hooks'
     default ``chain`` geometry (and the policy's ``split_words``); an
     engine the op does not declare raises exactly like ``dispatch``.
@@ -329,7 +331,8 @@ def local_plan(op: str, n: int, dtype, method: str = "auto", *,
         # (candidate_plans), so the resolved plan is always one the
         # execute-time predicates will accept.
         return autotune.get_plan(n, dtype, op=op, mesh=mesh,
-                                 policy=policy, objective=objective)
+                                 policy=policy, objective=objective,
+                                 bucket=bucket)
     eng = spec.engine(method)
     if eng is None:
         raise _unknown_method(spec, method)
@@ -409,7 +412,8 @@ def resolve_method(op: str, x, method: str, *, fallback: str = "vpu",
 
 
 def dispatch(op: str, x, *, method: str = "auto", chain=None,
-             precision=None, objective=None, **op_kwargs):
+             precision=None, objective=None, bucket: str = "pow2",
+             **op_kwargs):
     """THE dispatch path: every framework hook lands here.
 
     Explicit ``method`` spellings are resolved through the op's alias
@@ -438,6 +442,12 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
     milliseconds): it keys — and SLO-constrains — the auto plan (see
     ``autotune.autotune``); explicit methods ignore it (the caller
     already chose the engine).
+
+    ``bucket`` names the shape-bucketing policy the auto plan is keyed
+    under (``repro.core.autotune.bucket_cap`` — default pow-2 caps;
+    ``'geom'`` for the paper-geometry m²-aligned caps; ``None`` opts
+    out to exact-n keys).  One plan tuned at the bucket cap serves
+    every shape in the bucket; explicit methods ignore it.
     """
     from repro.core import autotune
     spec = op_spec(op)
@@ -454,7 +464,7 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
                                  x.dtype, op=op, engine=restrict,
                                  mesh=ctx.mesh_axes, policy=policy,
-                                 objective=objective)
+                                 objective=objective, bucket=bucket)
         return execute(op, _cast_in(x, policy, spec, plan.method),
                        plan, **op_kwargs)
     eng = spec.engine(method)
@@ -469,7 +479,7 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
                                  x.dtype, op=op, engine=(eng.name,),
                                  mesh=ctx.mesh_axes, policy=policy,
-                                 objective=objective)
+                                 objective=objective, bucket=bucket)
         return execute(op, x, plan, **op_kwargs)
     overrides = {} if chain is None else {"chain": int(chain)}
     overrides.update(_plan_words(policy))

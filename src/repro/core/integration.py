@@ -82,7 +82,8 @@ def _keepdims(out, axes: Optional[tuple], ndim: int, keepdims: bool):
 
 def reduce_sum(x, *, axis=None, keepdims: bool = False,
                method: Method = "mma", chain: int = 4,
-               precision=None, objective=None) -> jax.Array:
+               precision=None, objective=None,
+               bucket: str = "pow2") -> jax.Array:
     """Sum over ``axis`` (None = all elements), f32.
 
     'auto' selects a cached ReductionPlan (engine + chain + block_rows)
@@ -96,7 +97,9 @@ def reduce_sum(x, *, axis=None, keepdims: bool = False,
     ``objective`` (a ``repro.core.autotune.LatencyObjective`` or a
     bare number of milliseconds) makes the 'auto' selection SLO-aware
     and keys the plan with the ``|lat:`` suffix — the serving stack's
-    latency knob; explicit methods ignore it.
+    latency knob; explicit methods ignore it.  ``bucket`` names the
+    shape-bucketing policy the 'auto' plan is keyed under
+    (``repro.core.autotune.bucket_cap``; ``None`` for exact keys).
 
     >>> float(reduce_sum(jnp.ones((2, 8))))
     16.0
@@ -113,7 +116,7 @@ def reduce_sum(x, *, axis=None, keepdims: bool = False,
         return x.astype(jnp.float32)
     out = dispatch.dispatch("reduce_sum", x, method=method, chain=chain,
                             precision=precision, objective=objective,
-                            axis=axes)
+                            bucket=bucket, axis=axes)
     return _keepdims(out, axes, x.ndim, keepdims)
 
 
@@ -159,7 +162,8 @@ def masked_mean(values, mask, *, method: Method = "mma",
 
 def squared_sum(x, *, axis=None, keepdims: bool = False,
                 method: Method = "mma", chain: int = 4,
-                precision=None, objective=None) -> jax.Array:
+                precision=None, objective=None,
+                bucket: str = "pow2") -> jax.Array:
     """sum(x^2) over ``axis`` (None = all) — grad-norm building block.
 
     'mma' form: <x, x> as one dot_general — the reduction rides the MXU
@@ -173,7 +177,8 @@ def squared_sum(x, *, axis=None, keepdims: bool = False,
         return xf * xf
     out = dispatch.dispatch("squared_sum", x, method=method,
                             chain=chain, precision=precision,
-                            objective=objective, axis=axes)
+                            objective=objective, bucket=bucket,
+                            axis=axes)
     return _keepdims(out, axes, x.ndim, keepdims)
 
 

@@ -105,7 +105,8 @@ class RunningStats:
 def synthetic_requests(vocab_size: int, *, n: int, seed: int = 0,
                        min_len: int = 4, max_len: int = 16,
                        min_new: int = 1, max_new: int = 16,
-                       stagger: int = 0) -> Iterator[dict]:
+                       stagger: int = 0,
+                       bucket: Optional[str] = None) -> Iterator[dict]:
     """Deterministic ragged request stream for the serving engine.
 
     Yields ``n`` request dicts ``{"uid", "prompt", "max_new"}`` with
@@ -118,10 +119,21 @@ def synthetic_requests(vocab_size: int, *, n: int, seed: int = 0,
     ``SyntheticLMData`` (request ``uid`` regenerates its payload), and
     directly consumable by
     ``repro.launch.serve.ContinuousServer.serve``.
+
+    ``bucket`` (a plan-store bucket policy name —
+    ``repro.core.autotune.bucket_cap`` — e.g. ``'pow2'``) rounds each
+    drawn prompt length up to its bucket cap, clamped to ``max_len``:
+    the SAME policy the autotuner keys plans under, so prefill shapes
+    collapse onto already-tuned buckets instead of each ragged length
+    resolving (and possibly tuning) its own plan.  ``None`` (default)
+    keeps the raw ragged draw.
     """
     for uid in range(n):
         rng = np.random.default_rng(np.random.SeedSequence([seed, uid]))
         length = int(rng.integers(min_len, max_len + 1))
+        if bucket is not None:
+            from repro.core.autotune import bucket_cap
+            length = min(bucket_cap(length, bucket), max_len)
         budget = int(rng.integers(min_new, max_new + 1))
         if stagger:
             budget = min_new + (budget - min_new + uid) % \

@@ -14,8 +14,15 @@ The recovery contract at 1000+ node scale:
      handled as (2); transient stragglers are absorbed by the async
      checkpoint writer and the pipeline's prefetch queue. ``reassign``
      computes the deterministic batch->worker map after any re-mesh.
+  5. autotuned ``|mesh:`` plans describe per-device shard geometry, so
+     a re-mesh makes them stale: ``replan_after_remesh`` (wired into
+     ``TrainSupervisor.on_remesh``) invalidates every plan keyed to a
+     mesh signature other than the new one, and the next
+     ``method='auto'`` call resolves — and tunes — a fresh key for the
+     surviving geometry instead of silently serving dead-mesh plans
+     (docs/distributed.md, "Replanning on elastic remesh").
 
-``TrainSupervisor`` packages (1)-(3) for the training loop and is
+``TrainSupervisor`` packages (1)-(3)+(5) for the training loop and is
 exercised by tests/test_fault_tolerance.py (save -> crash -> restore ->
 bit-identical continuation).
 """
@@ -67,6 +74,33 @@ def remesh(devices: Optional[Sequence] = None, *, model_parallel: int,
     return jax.sharding.Mesh(arr, ("data", "model"))
 
 
+def replan_after_remesh(mesh, *, registry=None) -> tuple:
+    """Invalidate autotuned plans keyed to any mesh geometry other
+    than ``mesh``'s — call with the mesh ``remesh`` returned.
+
+    A ``|mesh:data4.model2`` plan encodes the per-device chain
+    geometry of an n/8 shard; after an 8->4-device remesh each
+    survivor holds an n/4 shard, so serving the old plan is silently
+    wrong-geometry.  Dropping every stale signature makes the next
+    ``method='auto'`` resolution tune a fresh ``|mesh:`` key for the
+    new shape.  Plans for the *new* signature (e.g. restored from a
+    shared store that already saw this geometry) are kept.  Returns
+    the invalidated keys.
+    """
+    from repro.core import autotune
+    reg = registry if registry is not None else \
+        autotune.default_registry()
+    keep = autotune.mesh_signature(mesh)
+    dead: list = []
+    for sig in reg.mesh_signatures():
+        if sig != keep:
+            dead.extend(reg.invalidate_mesh(sig))
+    if dead:
+        log.info("remesh to %s invalidated %d stale mesh plan(s)",
+                 keep or "<single-device>", len(dead))
+    return tuple(dead)
+
+
 def reassign(step: int, num_workers: int, num_shards: int) -> np.ndarray:
     """Deterministic shard->worker assignment for a given step/topology.
     After elastic re-mesh the surviving workers recompute this map and
@@ -110,3 +144,11 @@ class TrainSupervisor:
         self._saver.wait()
         ckpt.save(self.ckpt_dir, step, state)
         ckpt.cleanup(self.ckpt_dir, keep=self.keep)
+
+    def on_remesh(self, mesh, *, registry=None) -> tuple:
+        """The replan hook: after (re)building the mesh — at startup or
+        after a ``remesh`` — drop autotuned plans tuned for any other
+        mesh geometry (``replan_after_remesh``).  The training loop
+        calls this once per mesh (re)construction; returns the
+        invalidated plan keys."""
+        return replan_after_remesh(mesh, registry=registry)

@@ -111,7 +111,7 @@ def _local_reduce(op: str, x, method: str, mesh=None, precision=None):
 
 def tc_psum(x, *, mesh=None, method: str = "auto",
             op: str = "reduce_sum", via: str = "shard_map",
-            precision=None) -> jax.Array:
+            precision=None, bucket: str = "pow2") -> jax.Array:
     """Global reduction of every element of ``x`` across the mesh —
     one replicated f32 scalar.
 
@@ -145,6 +145,11 @@ def tc_psum(x, *, mesh=None, method: str = "auto",
     one-f32-partial-per-device contract with a per-device error
     budget.
 
+    ``bucket`` names the shape-bucketing policy the per-device plan
+    is keyed under (``repro.core.autotune.bucket_cap``; ``None`` for
+    exact keys) — ragged shard sizes collapse onto bucket caps so a
+    fleet shares tuned mesh plans instead of retuning per shape.
+
     Falls back to the plain dispatch path — exact, no shard_map —
     when there is no >1-device mesh, the input is 0-d, or its leading
     dimension shards over no mesh axis (pjit's global semantics make
@@ -173,7 +178,8 @@ def tc_psum(x, *, mesh=None, method: str = "auto",
     # 4x2 mesh, not n/8, and must not share the full-mesh plan entry.
     sub_mesh = tuple((a, int(mesh.shape[a])) for a in names)
     plan = dispatch.local_plan(op, x.size, x.dtype, method,
-                               mesh=sub_mesh, precision=policy)
+                               mesh=sub_mesh, precision=policy,
+                               bucket=bucket)
     # The policy's multiplicand cast, applied once to the global array
     # (sharding-preserving elementwise cast) so every local partial
     # sees the policy dtype; the split-capable engines are exempt
@@ -192,7 +198,7 @@ def tc_psum(x, *, mesh=None, method: str = "auto",
 
 def tc_all_reduce(tree, *, mesh=None, method: str = "auto",
                   op: str = "reduce_sum", via: str = "shard_map",
-                  precision=None):
+                  precision=None, bucket: str = "pow2"):
     """Leaf-wise ``tc_psum`` over a pytree: every leaf becomes one
     replicated f32 scalar (its global sum, or global sum of squares
     with ``op='squared_sum'``), each under its own mesh-keyed plan —
@@ -202,7 +208,8 @@ def tc_all_reduce(tree, *, mesh=None, method: str = "auto",
     mesh = _ambient_mesh(mesh)
     return jax.tree_util.tree_map(
         lambda leaf: tc_psum(leaf, mesh=mesh, method=method, op=op,
-                             via=via, precision=precision),
+                             via=via, precision=precision,
+                             bucket=bucket),
         tree)
 
 

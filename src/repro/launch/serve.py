@@ -47,7 +47,8 @@ from repro.models.kv_cache import PagedKVCache
 
 
 def batched_logprobs(logits, tokens, *, method: str = "auto",
-                     precision=None, objective=None) -> jax.Array:
+                     precision=None, objective=None,
+                     bucket: str = "pow2") -> jax.Array:
     """Per-token log-probabilities: (B, S, V) logits + (B, S) ids →
     (B, S) f32.
 
@@ -65,12 +66,15 @@ def batched_logprobs(logits, tokens, *, method: str = "auto",
     ``objective`` threads a latency SLO the same way (a
     ``repro.core.autotune.LatencyObjective``, its signature string, or
     a number of milliseconds): the auto plan is then the most accurate
-    candidate meeting the SLO for *this* logits shape.
+    candidate meeting the SLO for *this* logits shape.  ``bucket``
+    names the shape-bucketing policy the plan is keyed under
+    (``repro.core.autotune.bucket_cap``; ``None`` for exact keys).
     """
     lf = logits.astype(jnp.float32)
     shift = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
     z = ci.reduce_sum(jnp.exp(lf - shift), axis=-1, method=method,
-                      precision=precision, objective=objective)
+                      precision=precision, objective=objective,
+                      bucket=bucket)
     logz = jnp.log(z) + shift[..., 0]
     tok = jnp.take_along_axis(
         lf, tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
@@ -107,7 +111,7 @@ class Server:
     def score(self, params, tokens, *, mask=None,
               extras: Optional[dict] = None,
               method: str = "auto", precision=None,
-              objective=None) -> jax.Array:
+              objective=None, bucket: str = "pow2") -> jax.Array:
         """Total log-probability of each sequence under the model
         (teacher forcing): one full-sequence forward (the model's
         ``logits`` path — ``prefill`` keeps only the last position),
@@ -126,11 +130,12 @@ class Server:
         logits = self._logits(params, batch)
         lp = batched_logprobs(logits[:, :-1], toks[:, 1:],
                               method=method, precision=precision,
-                              objective=objective)
+                              objective=objective, bucket=bucket)
         if mask is not None:
             lp = lp * jnp.asarray(mask, jnp.float32)[:, 1:]
         return ci.reduce_sum(lp, axis=-1, method=method,
-                             precision=precision, objective=objective)
+                             precision=precision, objective=objective,
+                             bucket=bucket)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:
@@ -247,6 +252,18 @@ class ContinuousServer:
     masks ring-buffer slots past ``kv_len`` in-kernel.  The same
     ``latency_slo_ms`` keys the attention plans, and prefill- vs
     decode-shaped problems bucket to distinct plan keys.
+
+    ``bucket`` names the plan store's shape-bucketing policy
+    (``repro.core.autotune.bucket_cap``) every auto plan the engine
+    resolves is keyed under; ``warmup`` (see the method) pre-resolves
+    the scoring-plan hot set and pre-compiles bucketed prefill shapes
+    before traffic; ``background_sweeps=True`` attaches a
+    ``repro.core.autotune.SweepWorker`` to the plan registry so
+    model-cost plans resolved on the hot path are upgraded to measured
+    plans in the background — ``close()`` (or the context-manager
+    form) detaches and stops it, and can never deadlock on an
+    in-flight sweep (the worker follows the data-pipeline prefetch
+    shutdown pattern).
     """
 
     def __init__(self, model, *, num_slots: int = 4, capacity: int = 128,
@@ -254,7 +271,9 @@ class ContinuousServer:
                  precision=None, mesh=None, temperature: float = 0.0,
                  latency_slo_ms: Optional[float] = None,
                  logprobs: bool = False, seed: int = 0,
-                 attn_method: Optional[str] = None):
+                 attn_method: Optional[str] = None,
+                 bucket: str = "pow2",
+                 background_sweeps: bool = False):
         cfg = model.cfg
         if cfg.is_encdec or cfg.vision_tokens:
             raise ValueError(
@@ -289,6 +308,13 @@ class ContinuousServer:
         self.objective = latency_slo_ms
         self.logprobs = bool(logprobs)
         self.seed = int(seed)
+        self.bucket = bucket
+        self._sweeper = None
+        if background_sweeps:
+            from repro.core import autotune
+            reg = autotune.default_registry()
+            self._sweeper = autotune.SweepWorker(reg)
+            reg.sweep_worker = self._sweeper
         m = model
 
         def prefill(params, batch, extra_capacity):
@@ -303,6 +329,71 @@ class ContinuousServer:
         self._prefill = jax.jit(prefill,
                                 static_argnames=("extra_capacity",))
         self._decode = jax.jit(decode)
+
+    # ----------------------------------------------- warmup/lifecycle
+
+    def warmup(self, params=None, *, prompt_lens=None) -> dict:
+        """Pre-resolve the serving hot set before traffic arrives.
+
+        Plan side (always): the scoring reductions' two hot shapes —
+        admission scores (1, 1, V) last-position logits, the decode
+        loop (num_slots, 1, V) — run once through the real scoring
+        path, so their ``|lat:``-keyed plans are resolved (and the
+        scoring reductions compiled) under the server's bucket policy.
+
+        Compile side (when ``params`` is given): one batch-1 prefill
+        per bucketed prompt length — default: the ``self.bucket``
+        bucket caps that fit ``capacity`` — populates the jit cache,
+        so admitting a bucketed request stream
+        (``repro.data.pipeline.synthetic_requests`` with the same
+        ``bucket``) never compiles mid-traffic.
+
+        Returns ``{"plans", "scoring_shapes", "prefill_compiles"}``
+        (``plans`` = tuning events this warmup caused in the default
+        registry).
+        """
+        from repro.core import autotune
+        reg = autotune.default_registry()
+        before = len(reg)
+        V = self.cfg.vocab_size
+        shapes = ((1, 1, V), (self.num_slots, 1, V))
+        for shape in shapes:
+            self._lp(jnp.zeros(shape, jnp.float32),
+                     jnp.zeros(shape[:2], jnp.int32))
+        lens: tuple = ()
+        if params is not None:
+            if prompt_lens is None:
+                caps = {min(autotune.bucket_cap(L, self.bucket),
+                            self.capacity - 1)
+                        for L in range(1, self.capacity)}
+                lens = tuple(sorted(caps))
+            else:
+                lens = tuple(sorted(set(int(L) for L in prompt_lens)))
+            for L in lens:
+                tokens = jnp.zeros((1, L), jnp.int32)
+                self._prefill(params, {"tokens": tokens},
+                              self.capacity - L)
+        return {"plans": len(reg) - before, "scoring_shapes": shapes,
+                "prefill_compiles": len(lens)}
+
+    def close(self) -> None:
+        """Detach and stop the background sweep worker (idempotent;
+        safe with sweeps still in flight — the worker's shutdown
+        drains rather than joins on pending work)."""
+        if self._sweeper is None:
+            return
+        from repro.core import autotune
+        reg = autotune.default_registry()
+        if reg.sweep_worker is self._sweeper:
+            reg.sweep_worker = None
+        self._sweeper.close()
+        self._sweeper = None
+
+    def __enter__(self) -> "ContinuousServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------ pieces
 
@@ -328,7 +419,8 @@ class ContinuousServer:
         (1, S, V) logits — the latency-objective scoring reduction."""
         lp = batched_logprobs(logits, tokens, method="auto",
                               precision=self.precision,
-                              objective=self.objective)
+                              objective=self.objective,
+                              bucket=self.bucket)
         return lp[:, -1]
 
     # -------------------------------------------------------- loop
@@ -456,7 +548,21 @@ def main():
                     help="attention registry engine for the continuous "
                          "engine (fused_pallas | unfused_mma | vpu | "
                          "auto)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-resolve scoring plans and pre-compile "
+                         "bucketed prefill shapes before serving")
+    ap.add_argument("--background-sweeps", action="store_true",
+                    help="upgrade model-cost plans to measured plans "
+                         "in a background sweep worker")
+    ap.add_argument("--plan-store", default=None,
+                    help="shared autotune plan-store JSON: merged in "
+                         "at startup, saved (atomic, file-locked, "
+                         "merge-on-save) at exit")
     args = ap.parse_args()
+
+    if args.plan_store:
+        from repro.core import autotune
+        autotune.bind_default_registry(args.plan_store)
 
     from repro.configs import registry
     cfg = registry.get_config(args.arch, smoke=not args.full)
@@ -471,17 +577,28 @@ def main():
             model, num_slots=args.num_slots, capacity=args.capacity,
             quant=args.quant, latency_slo_ms=args.latency_slo_ms,
             logprobs=args.latency_slo_ms is not None,
-            attn_method=args.attn_method)
-        reqs = [Request(uid=i, prompt=prompts[i], max_new=args.max_new)
-                for i in range(args.batch)]
-        t0 = time.time()
-        outs = eng.generate(params, reqs)
-        dt = time.time() - t0
+            attn_method=args.attn_method,
+            background_sweeps=args.background_sweeps)
+        with eng:
+            if args.warmup:
+                t0 = time.time()
+                info = eng.warmup(params)
+                print(f"warmup: {info['plans']} plans tuned, "
+                      f"{info['prefill_compiles']} prefill shapes "
+                      f"compiled in {time.time() - t0:.2f}s")
+            reqs = [Request(uid=i, prompt=prompts[i],
+                            max_new=args.max_new)
+                    for i in range(args.batch)]
+            t0 = time.time()
+            outs = eng.generate(params, reqs)
+            dt = time.time() - t0
         n = sum(len(t) for t in outs.values())
         print(f"continuous: {n} tokens from {len(reqs)} requests in "
               f"{dt:.2f}s ({n / dt:.1f} tok/s)")
         for uid in sorted(outs)[:2]:
             print(uid, outs[uid])
+        if args.plan_store:
+            autotune.default_registry().save(args.plan_store)
         return
 
     extras = {}

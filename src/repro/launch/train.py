@@ -165,8 +165,15 @@ def run(arch: str, *, steps: int = 200, smoke: bool = True,
         batch_override: Optional[int] = None,
         seq_override: Optional[int] = None,
         microbatches: int = 1, log_every: int = 10,
-        save_every: int = 100, seed: int = 0):
-    """End-to-end training driver (examples + integration tests)."""
+        save_every: int = 100, seed: int = 0,
+        plan_store: Optional[str] = None):
+    """End-to-end training driver (examples + integration tests).
+
+    ``plan_store`` binds the autotune registry to a shared plan-store
+    file (``repro.core.autotune.bind_default_registry``): plans tuned
+    by fleet peers merge in at startup and this run's plans are saved
+    back (atomic, file-locked, merge-on-save) at the end.
+    """
     from repro.configs import registry
     from repro.launch.mesh import make_local_mesh
 
@@ -178,6 +185,9 @@ def run(arch: str, *, steps: int = 200, smoke: bool = True,
             seq_len=seq_override or shape_cfg.seq_len)
     tconf = TrainConfig(total_steps=steps, warmup_steps=max(steps // 10, 1),
                         microbatches=microbatches, seed=seed)
+    if plan_store:
+        from repro.core import autotune
+        autotune.bind_default_registry(plan_store)
     mesh = make_local_mesh(data_parallel, model_parallel)
     model = model_zoo.build(cfg)
 
@@ -196,6 +206,12 @@ def run(arch: str, *, steps: int = 200, smoke: bool = True,
     sup = TrainSupervisor(ckpt_dir, save_every=save_every) \
         if ckpt_dir else None
     if sup:
+        # Replan hook: this process may be a restart onto a smaller
+        # (or re-grown) device set — drop autotuned plans keyed to any
+        # other mesh geometry so method='auto' tunes fresh |mesh: keys
+        # for the mesh we actually built (fault_tolerance, recovery
+        # contract step 5).
+        sup.on_remesh(mesh)
         state, start = sup.restore_or_init(init_fn)
     else:
         state, start = init_fn(), 0
@@ -215,6 +231,8 @@ def run(arch: str, *, steps: int = 200, smoke: bool = True,
             sup.maybe_save(step_i + 1, state)
     if sup:
         sup.finalize(steps, state)
+    if plan_store:
+        autotune.default_registry().save(plan_store)
     return state, history
 
 
@@ -230,13 +248,17 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--plan-store", default=None,
+                    help="shared autotune plan-store JSON (merged at "
+                         "startup, saved at exit)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     run(args.arch, steps=args.steps, smoke=not args.full,
         batch_override=args.batch, seq_override=args.seq,
         microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
         data_parallel=args.data_parallel,
-        model_parallel=args.model_parallel)
+        model_parallel=args.model_parallel,
+        plan_store=args.plan_store)
 
 
 if __name__ == "__main__":

@@ -331,3 +331,133 @@ def test_integration_reduce_sum_accepts_objective(fresh_plan_registry):
     want = np.asarray(x, np.float64).sum(-1)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
                                atol=1e-3)
+
+
+# ---------------------------------------------------------------------
+# Shape bucketing (ISSUE-8): policies, key grammar, boundary parity
+# ---------------------------------------------------------------------
+
+_M = autotune.DEFAULT_M
+
+
+def test_bucket_cap_pow2_matches_legacy_bucket_n():
+    """The default policy IS the historical grammar: keys produced
+    under bucket='pow2' are bit-identical to pre-bucketing keys."""
+    for n in [1, 2, 3, 127, 128, 129, 1000, 1024, 1025, 1 << 20]:
+        assert autotune.bucket_cap(n) == autotune.bucket_n(n)
+        assert autotune.bucket_cap(n, "pow2") == autotune.bucket_n(n)
+
+
+def test_bucket_cap_geom_is_m_aligned():
+    cap = lambda n: autotune.bucket_cap(n, "geom")  # noqa: E731
+    assert cap(1) == _M and cap(_M) == _M
+    assert cap(_M + 1) == 2 * _M
+    assert cap(3 * _M - 5) == 3 * _M          # finer than an octave
+    assert cap(_M * _M) == _M * _M
+    assert cap(_M * _M + 1) == 2 * _M * _M    # m^2-aligned above m^2
+    assert cap(20_000) == 2 * _M * _M
+
+
+def test_bucket_cap_none_exact_and_unknown_policy_raises():
+    assert autotune.bucket_cap(1000, None) == 1000
+    assert autotune.bucket_cap(0, None) == 1   # degenerate floor
+    with pytest.raises(ValueError, match="bucket"):
+        autotune.bucket_cap(1000, "octave")
+
+
+@pytest.mark.parametrize("bucket", ["pow2", "geom", None])
+def test_bucket_floor_is_the_buckets_lower_edge(bucket):
+    for n in [1, 37, 128, 1000, 4096, 20_000]:
+        cap = autotune.bucket_cap(n, bucket)
+        lo = autotune.bucket_floor(n, bucket)
+        assert lo <= n <= cap
+        assert autotune.bucket_cap(lo, bucket) == cap
+        if lo > 1:
+            assert autotune.bucket_cap(lo - 1, bucket) < cap
+
+
+def test_plan_key_bucket_changes_only_the_size_field():
+    """Every suffix (engine, prec:, lat:, mesh:) and its ordering is
+    policy-invariant — bucketing swaps the one size component."""
+    from repro.core.precision import MmaPolicy
+    policy = MmaPolicy(split_words=2, error_budget_pct=0.5)
+    kw = dict(backend="cpu", engine="pallas", policy=policy,
+              objective=0.25, mesh="data4.model2")
+    n = 1000
+    ks = {b: autotune.plan_key("reduce_sum", n, jnp.float32,
+                               bucket=b, **kw)
+          for b in ("pow2", "geom", None)}
+    parts = {b: k.split("|") for b, k in ks.items()}
+    assert parts["pow2"][1] == "1024"
+    assert parts["geom"][1] == "1024"   # 8*m < 1000 <= 8*m? no: cap
+    assert parts[None][1] == "1000"
+    for b in ("geom", None):
+        assert parts[b][0] == parts["pow2"][0]
+        assert parts[b][2:] == parts["pow2"][2:], b
+    assert ks["pow2"].endswith("|mesh:data4.model2")
+
+
+def test_plan_key_bucket_none_reproduces_exact_default_keys():
+    """On a cap-aligned n the opt-out spelling is bit-for-bit the
+    default key — exact-size tuning shares the bucketed cache."""
+    for n in [128, 1024, 1 << 16]:
+        assert autotune.plan_key("reduce_sum", n, jnp.float32) == \
+            autotune.plan_key("reduce_sum", n, jnp.float32, bucket=None)
+    # and off-alignment they differ only in the size field
+    a = autotune.plan_key("reduce_sum", 999, jnp.float32)
+    b = autotune.plan_key("reduce_sum", 999, jnp.float32, bucket=None)
+    assert a != b and a.split("|")[2:] == b.split("|")[2:]
+
+
+def test_bucketed_ragged_sizes_share_one_plan(fresh_plan_registry):
+    """Many ragged n, one bucket -> one registry entry (per policy)."""
+    reg = fresh_plan_registry
+    for n in (1025, 1500, 1999, 2048):
+        autotune.get_plan(n, jnp.float32, registry=reg)
+    assert len(reg) == 1
+    for n in (2 * _M + 1, 3 * _M - 7, 3 * _M):
+        autotune.get_plan(n, jnp.float32, registry=reg, bucket="geom")
+    assert len(reg) == 2
+    autotune.get_plan(1500, jnp.float32, registry=reg, bucket=None)
+    assert len(reg) == 3   # exact key tunes apart
+
+
+def test_bucketed_keys_json_round_trip(fresh_plan_registry):
+    reg = fresh_plan_registry
+    autotune.get_plan(1500, jnp.float32, registry=reg)            # 2048
+    autotune.get_plan(300, jnp.float32, registry=reg,
+                      bucket="geom")                              # 384
+    autotune.get_plan(777, jnp.float32, registry=reg, bucket=None)
+    back = autotune.PlanRegistry.from_json(reg.to_json())
+    assert back.items() == reg.items()
+    keys = {k for k, _ in back.items()}
+    assert "reduce_sum|2048|float32|cpu" in keys
+    assert "reduce_sum|384|float32|cpu" in keys
+    assert "reduce_sum|777|float32|cpu" in keys
+
+
+def test_bucket_boundary_parity_every_op_engine():
+    """The bucketing correctness contract: the plan tuned at a
+    bucket's CAP executes every n in the bucket (floor, interior,
+    cap) within the error budget of the fp64 oracle, for every
+    op x engine the registry declares."""
+    from repro.core import dispatch, precision
+    budget_pct = 0.5
+    cap = 2048
+    lo = autotune.bucket_floor(cap)
+    sizes = (lo, 1500, cap)
+    for op in ("reduce_sum", "squared_sum"):
+        for engine in dispatch.op_spec(op).engine_names():
+            plan = autotune.autotune(cap, jnp.float32, op=op,
+                                     engine=engine)
+            for n in sizes:
+                x32 = precision.uniform_input(n, seed=3).astype(
+                    np.float32)
+                got = float(dispatch.execute(op, jnp.asarray(x32),
+                                             plan))
+                oracle_in = x32.astype(np.float64)
+                if op == "squared_sum":
+                    oracle_in = oracle_in ** 2
+                err = precision.percent_error(got, oracle_in)
+                assert err <= budget_pct, \
+                    (op, engine, n, plan.method, err)

@@ -179,3 +179,25 @@ def test_synthetic_requests_ragged_and_deterministic():
     assert len({r["max_new"] for r in a}) > 1, "budgets should stagger"
     assert all((r["prompt"] >= 0).all() and (r["prompt"] < 97).all()
                for r in a)
+
+
+def test_synthetic_requests_bucket_collapses_prompt_lengths():
+    """ISSUE-8: the request stream shares the autotuner's bucket
+    policy — drawn prompt lengths round up to their bucket cap
+    (clamped to max_len), so ragged traffic lands on the handful of
+    shapes warmup already resolved.  Default stays raw-ragged."""
+    from repro.core.autotune import bucket_cap
+    from repro.data.pipeline import synthetic_requests
+    kw = dict(n=48, seed=5, min_len=5, max_len=64, min_new=1,
+              max_new=4)
+    raw = [len(r["prompt"]) for r in synthetic_requests(97, **kw)]
+    cooked = [len(r["prompt"])
+              for r in synthetic_requests(97, bucket="pow2", **kw)]
+    assert set(cooked) <= {8, 16, 32, 64}        # pow-2 caps, clamped
+    assert len(set(cooked)) < len(set(raw))      # genuinely collapsed
+    # element-wise: each cooked length is its raw draw's cap
+    assert cooked == [min(bucket_cap(L), 64) for L in raw]
+    # determinism: same seed, same stream
+    again = [len(r["prompt"])
+             for r in synthetic_requests(97, bucket="pow2", **kw)]
+    assert cooked == again

@@ -79,3 +79,83 @@ def test_reassign_deterministic_and_covering():
     assert counts.sum() == 9 and counts.max() - counts.min() <= 1
     c = reassign(step=13, num_workers=3, num_shards=9)
     assert not np.array_equal(a, c)
+
+
+# ---------------------------------------------------------------------
+# Replanning on elastic remesh (ISSUE-8)
+# ---------------------------------------------------------------------
+
+_REPLAN_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    from repro.core import autotune
+    from repro.distributed.fault_tolerance import (TrainSupervisor,
+                                                   remesh)
+
+    reg = autotune.PlanRegistry()
+    out = {}
+
+    # 8 devices: method='auto' resolves a mesh-keyed plan
+    mesh8 = remesh(jax.devices(), model_parallel=1)
+    autotune.get_plan(1 << 16, jnp.float32, registry=reg, mesh=mesh8)
+    out["keys8"] = sorted(k for k, _ in reg.items())
+
+    # lose half the fleet: remesh 8 -> 4 and run the replan hook
+    mesh4 = remesh(jax.devices()[:4], model_parallel=1)
+    sup = TrainSupervisor(ckpt_dir=os.environ["REPLAN_CKPT"])
+    out["dead"] = sorted(sup.on_remesh(mesh4, registry=reg))
+    out["after_invalidate"] = sorted(k for k, _ in reg.items())
+
+    # the next auto resolution tunes a FRESH key for the new geometry
+    autotune.get_plan(1 << 16, jnp.float32, registry=reg, mesh=mesh4)
+    out["keys4"] = sorted(k for k, _ in reg.items())
+    # replan is idempotent for the surviving geometry
+    out["dead2"] = sorted(sup.on_remesh(mesh4, registry=reg))
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_remesh_8_to_4_resolves_fresh_mesh_key(tmp_path):
+    """The acceptance sequence: tune under an 8-device mesh, remesh to
+    4 in-process, and prove by plan-key inspection that the stale
+    ``|mesh:data8`` plan is invalidated and ``method='auto'`` resolves
+    a fresh ``|mesh:data4`` key."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"),
+               REPLAN_CKPT=str(tmp_path / "ckpt"))
+    p = subprocess.run([sys.executable, "-c", _REPLAN_PROG],
+                       capture_output=True, text=True, env=env,
+                       timeout=300)
+    assert p.returncode == 0, p.stderr[-3000:]
+    line = [ln for ln in p.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    k8 = "reduce_sum|65536|float32|cpu|mesh:data8.model1"
+    k4 = "reduce_sum|65536|float32|cpu|mesh:data4.model1"
+    assert out["keys8"] == [k8]
+    assert out["dead"] == [k8]
+    assert out["after_invalidate"] == []
+    assert out["keys4"] == [k4]
+    assert out["dead2"] == []
+
+
+def test_replan_in_process_keeps_new_mesh_plans():
+    """replan_after_remesh drops every signature except the new
+    mesh's; mesh-free plans are untouched (signature-string form)."""
+    from repro.core import autotune
+    from repro.distributed.fault_tolerance import replan_after_remesh
+    plan = autotune.ReductionPlan(method="vpu")
+    reg = autotune.PlanRegistry()
+    keep = "reduce_sum|1024|float32|cpu|mesh:data4"
+    stale8 = "reduce_sum|1024|float32|cpu|mesh:data8"
+    stale2 = "scan|1024|float32|cpu|mma+vpu|mesh:data2.model4"
+    plain = "reduce_sum|1024|float32|cpu"
+    for k in (keep, stale8, stale2, plain):
+        reg.put(k, plan)
+    dead = replan_after_remesh("data4", registry=reg)
+    assert sorted(dead) == sorted([stale2, stale8])
+    assert sorted(k for k, _ in reg.items()) == [plain, keep]

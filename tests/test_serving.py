@@ -231,3 +231,32 @@ def test_engine_rejects_oversized_and_encdec(served_model):
     enc_model = model_zoo.build(enc_cfg)
     with pytest.raises(ValueError, match="text decoders"):
         ContinuousServer(enc_model)
+
+
+def test_continuous_server_warmup_and_background_sweeps(
+        served_model, fresh_plan_registry):
+    """ISSUE-8 serving lifecycle: warmup pre-resolves the scoring
+    plans and pre-compiles prefill at every bucketed prompt length;
+    background_sweeps attaches a SweepWorker to the default registry;
+    close() (context-manager exit) detaches it deadlock-free."""
+    from repro.core import autotune
+    cfg, model, params = served_model
+    with ContinuousServer(model, num_slots=2, capacity=16,
+                          page_size=8, quant="none",
+                          background_sweeps=True) as eng:
+        assert autotune.default_registry().sweep_worker is eng._sweeper
+        out = eng.warmup(params)
+        V = cfg.vocab_size
+        assert out["scoring_shapes"] == ((1, 1, V), (2, 1, V))
+        # pow-2 caps clamped to capacity-1: {1, 2, 4, 8, 15}
+        assert out["prefill_compiles"] == 5
+        # hot set resolved: warming again causes zero tuning events
+        assert eng.warmup()["plans"] == 0
+        # a bucketed request stream decodes normally post-warmup
+        reqs = [Request(**d) for d in synthetic_requests(
+            cfg.vocab_size, n=3, seed=3, min_len=3, max_len=8,
+            min_new=2, max_new=4, bucket="pow2")]
+        got = eng.generate(params, reqs)
+        assert sorted(got) == [0, 1, 2]
+    assert autotune.default_registry().sweep_worker is None
+    eng.close()    # idempotent after context exit
