@@ -26,12 +26,16 @@ import numpy as np
 from benchmarks.common import emit, time_us
 from repro.core import dispatch, tc_reduce
 from repro.core.autotune import ReductionPlan
-from repro.core.precision import (normal_input, percent_error,
+from repro.core.precision import (F64_EQUIVALENT, dd_value,
+                                  normal_input, percent_error,
                                   uniform_input)
 
 SIZES = [1 << 16, 1 << 20, 1 << 23]
 
-# The frontier's engine column: (label, plan).
+# The frontier's engine column: (label, plan).  The dd row is the
+# frontier's accuracy end-point: f64-equivalent error from f32 MMAs,
+# priced at ~2x the compensated chain (it runs the pair-granular
+# merge tree per word).
 FRONTIER = [
     ("vpu", ReductionPlan(method="vpu")),
     ("mma", ReductionPlan(method="mma")),
@@ -39,6 +43,7 @@ FRONTIER = [
                                 split_words=2)),
     ("mma_ec_w3", ReductionPlan(method="mma_ec", chain=2,
                                 split_words=3)),
+    ("mma_dd", ReductionPlan(method="mma_dd")),
 ]
 
 
@@ -95,11 +100,15 @@ def frontier():
                                            mma_plan)), xj)
             mma_model = model_cost(mma_plan, n, jnp.float32)
             for name, plan in FRONTIER:
-                fn = jax.jit(lambda v, p=plan: dispatch.execute(
-                    "reduce_sum", v, p))
+                spec = dispatch.op_spec("reduce_sum")
+                gated = dispatch._policy_reason(
+                    spec.engine(plan.method), None) is not None
+                kw = {"policy": F64_EQUIVALENT} if gated else {}
+                fn = jax.jit(lambda v, p=plan, k=kw: dispatch.execute(
+                    "reduce_sum", v, p, **k))
                 us = mma_us if name == "mma" else time_us(fn, xj)
                 model = model_cost(plan, n, jnp.float32)
-                err = percent_error(float(fn(xj)), x64)
+                err = percent_error(dd_value(fn(xj)), x64)
                 emit(f"frontier/{dist}/{name}/n={n}", us,
                      f"pct_err={err:.3e},x_mma={us / mma_us:.2f}"
                      f",model_x_mma={model / mma_model:.2f}")

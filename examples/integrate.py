@@ -1,0 +1,134 @@
+"""Numerical integration on the dd engine family: the f64-equivalent
+budget tier in action.
+
+Two estimators whose accuracy is limited ONLY by the accumulation:
+
+  * composite Simpson quadrature of the oscillatory integrand
+    f(x) = cos(2.5 x) on [0, pi] — closed form sin(2.5 pi)/2.5;
+  * a Monte-Carlo estimate of pi via 4/(1+x^2) on [0, 1], gated
+    against the f64 oracle of the SAME samples (so the gate measures
+    accumulation error, not sampling error).
+
+Both ride ``dispatch('reduce_sum', ..., method='auto')`` under
+``precision.F64_EQUIVALENT`` — the MmaPolicy(accum_dtype=float64,
+error_budget_pct=1e-10) tier that only the double-double ``mma_dd`` /
+``pallas_dd`` engines can meet.  The resolved plan is printed off the
+registry, the (hi, lo) pair collapses through ``dd_value``, and the
+same sums are re-run through the f32 'mma' and compensated 'mma_ec'
+engines to show both FAIL the 1e-12 relative-error gate the dd
+engines pass.
+
+  PYTHONPATH=src python examples/integrate.py
+
+Requires x64 enabled (done below, before any jax import elsewhere):
+the integrand is sampled in float64 so the dd split has real low-order
+bits to carry.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import autotune  # noqa: E402
+from repro.core.integration import reduce_sum  # noqa: E402
+from repro.core.precision import F64_EQUIVALENT, dd_value  # noqa: E402
+
+N_QUAD = (1 << 20) + 1          # Simpson needs an odd point count
+N_MC = 1 << 20
+GATE_REL = 1e-12                # only the dd family passes this
+
+
+def simpson_weights(n: int, h: float) -> np.ndarray:
+    """Composite Simpson weights for n (odd) points at spacing h."""
+    w = np.full(n, 2.0)
+    w[1::2] = 4.0
+    w[0] = w[-1] = 1.0
+    return w * (h / 3.0)
+
+
+def quadrature_terms() -> tuple:
+    """(terms, exact): weighted f64 samples of cos(2.5 x) on [0, pi]
+    and the closed-form integral sin(2.5 pi)/2.5."""
+    xs = np.linspace(0.0, np.pi, N_QUAD)
+    h = xs[1] - xs[0]
+    terms = np.cos(2.5 * xs) * simpson_weights(N_QUAD, h)
+    return terms, float(np.sin(2.5 * np.pi) / 2.5)
+
+
+def monte_carlo_terms(seed: int = 7) -> np.ndarray:
+    """f64 Monte-Carlo terms for pi = integral of 4/(1+x^2) on [0,1]."""
+    xs = np.random.default_rng(seed).random(N_MC)
+    return 4.0 / (1.0 + xs * xs) / N_MC
+
+
+def dd_sum(terms: np.ndarray) -> float:
+    """Sum through the dispatch auto path under the f64-equivalent
+    budget tier: auto must resolve a dd engine (nothing else meets the
+    1e-10% budget) and return the (hi, lo) pair dd_value collapses."""
+    out = reduce_sum(jnp.asarray(terms, jnp.float64), method="auto",
+                     precision=F64_EQUIVALENT)
+    assert out.shape == (2,), out.shape
+    return dd_value(out)
+
+
+def f32_sum(terms: np.ndarray, method: str) -> float:
+    """The same sum through an f32-scalar engine — the comparison
+    baseline whose accumulation error fails the gate."""
+    return float(reduce_sum(jnp.asarray(terms, jnp.float32),
+                            method=method))
+
+
+def resolved_plans() -> list:
+    """(key, method) rows the auto path cached for this run."""
+    return sorted((k, p.method) for k, p in
+                  autotune.default_registry().items()
+                  if k.startswith("reduce_sum"))
+
+
+def report(name: str, estimate: float, truth: float) -> float:
+    rel = abs(estimate - truth) / abs(truth)
+    verdict = "PASS" if rel <= GATE_REL else "FAIL"
+    print(f"  {name:>28s}  {estimate:+.15f}  rel={rel:9.3e}  "
+          f"[{verdict} @ {GATE_REL:g}]")
+    return rel
+
+
+def main() -> int:
+    failures = 0
+
+    terms, exact = quadrature_terms()
+    print(f"Simpson quadrature of cos(2.5 x) on [0, pi], "
+          f"n={N_QUAD}  (exact {exact:+.15f})")
+    rel_dd = report("mma_dd family (auto)", dd_sum(terms), exact)
+    rel_mma = report("mma (f32 scalar)", f32_sum(terms, "mma"), exact)
+    rel_ec = report("mma_ec (compensated)", f32_sum(terms, "mma_ec"),
+                    exact)
+    failures += rel_dd > GATE_REL
+    # the gate must SEPARATE the families, not just pass dd
+    failures += not (rel_mma > GATE_REL and rel_ec > GATE_REL)
+
+    mc = monte_carlo_terms()
+    oracle = float(np.sum(mc.astype(np.float64)))
+    print(f"\nMonte-Carlo pi via 4/(1+x^2), n={N_MC}  "
+          f"(sample oracle {oracle:+.15f}, pi={np.pi:+.15f})")
+    rel_dd = report("mma_dd family (auto)", dd_sum(mc), oracle)
+    rel_mma = report("mma (f32 scalar)", f32_sum(mc, "mma"), oracle)
+    failures += rel_dd > GATE_REL
+    failures += not rel_mma > GATE_REL
+
+    print("\nauto-resolved plans (plan registry):")
+    for key, method in resolved_plans():
+        print(f"  {method:>10s}  <-  {key}")
+    dd_plans = [m for _, m in resolved_plans()
+                if m in ("mma_dd", "pallas_dd")]
+    failures += not dd_plans
+
+    print("\nACCURACY GATE:", "PASS" if failures == 0 else "FAIL")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

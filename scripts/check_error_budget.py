@@ -7,13 +7,23 @@ engine at a fast probe size and fails if any engine's error exceeds
 its hard ceiling.  The ceilings encode the subsystem's accuracy
 contract on this (XLA-CPU) backend with ~20x headroom over measured
 values, so a numerics regression — a lost f32 accumulator, a dropped
-compensation term, a split word that stops reconstructing — fails CI
-before it ships:
+compensation term, a split word that stops reconstructing, a dd pair
+that stops carrying its low word — fails CI before it ships:
 
   * the classic baseline and the plain MMA engines must stay at
     f32-accumulation error levels;
   * the compensated `mma_ec` / `pallas_ec` family must stay an order
-    of magnitude *below* them (that is the engine's reason to exist).
+    of magnitude *below* them (that is the engine's reason to exist);
+  * the double-double `mma_dd` / `pallas_dd` family must stay at
+    f64-equivalent levels (<= 1e-10%) — three orders of headroom over
+    its measured ~1e-13% floor.
+
+THE ORACLE CONTRACT (pinned by tests/test_accuracy_contract.py): the
+fp64 oracle is built from the f32-CAST input — ``oracle_for(x32, op)``
+sums ``x32.astype(np.float64)``, never the pre-cast f64 data.  The
+gate therefore measures ACCUMULATION error only; representation error
+(the one-time f64 -> f32 rounding of each element) is out of scope by
+construction, because no engine can recover bits the input never had.
 
 XLA-CPU arithmetic is deterministic for a fixed input, so the gate
 does not flake; two seeds guard against a single lucky draw.
@@ -30,7 +40,8 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.core.autotune import ReductionPlan
-from repro.core.precision import percent_error, uniform_input
+from repro.core.precision import (F64_EQUIVALENT, dd_value,
+                                  percent_error, uniform_input)
 
 PROBE_N = 1 << 16
 SEEDS = (0, 1)
@@ -49,23 +60,52 @@ GATES = [
      ReductionPlan(method="mma_ec", chain=2, split_words=3), 1e-4),
     ("pallas_ec_w2", "reduce_sum",
      ReductionPlan(method="pallas_ec", chain=2, split_words=2), 1e-4),
+    ("mma_dd", "reduce_sum", ReductionPlan(method="mma_dd"), 1e-10),
+    ("pallas_dd", "reduce_sum",
+     ReductionPlan(method="pallas_dd", chain=2, block_rows=128), 1e-10),
     ("sq_mma_ec_w2", "squared_sum",
      ReductionPlan(method="mma_ec", chain=2, split_words=2), 1e-4),
     ("sq_vpu", "squared_sum", ReductionPlan(method="vpu"), 5e-4),
+    ("sq_mma_dd", "squared_sum", ReductionPlan(method="mma_dd"), 1e-10),
+    ("sq_pallas_dd", "squared_sum",
+     ReductionPlan(method="pallas_dd", chain=2, block_rows=128), 1e-10),
 ]
+
+
+def oracle_for(x32: np.ndarray, op: str) -> np.ndarray:
+    """The fp64 oracle input for one gate: the f32-cast probe promoted
+    to f64 (NEVER the pre-cast f64 data — the gate's contract is
+    accumulation error only; see the module docstring)."""
+    if x32.dtype != np.float32:
+        raise TypeError(
+            f"oracle_for takes the f32-cast probe, got {x32.dtype}: "
+            "building the oracle from pre-cast data would charge "
+            "engines for representation error no summation order can "
+            "recover")
+    oracle_in = x32.astype(np.float64)
+    if op == "squared_sum":
+        oracle_in = oracle_in ** 2
+    return oracle_in
+
+
+def run_gate(x32: np.ndarray, op: str, plan: ReductionPlan) -> float:
+    """Execute one gate's plan on the f32 probe and collapse to a
+    python float (dd plans return a (hi, lo) pair and are only legal
+    under the f64-equivalent policy)."""
+    spec = dispatch.op_spec(op)
+    gated = dispatch._policy_reason(spec.engine(plan.method),
+                                    None) is not None
+    kw = {"policy": F64_EQUIVALENT} if gated else {}
+    return dd_value(dispatch.execute(op, jnp.asarray(x32), plan, **kw))
 
 
 def main() -> int:
     failures = 0
     for seed in SEEDS:
         x32 = uniform_input(PROBE_N, seed=seed).astype(np.float32)
-        xj = jnp.asarray(x32)
         for label, op, plan, ceiling in GATES:
-            got = float(dispatch.execute(op, xj, plan))
-            oracle_in = x32.astype(np.float64)
-            if op == "squared_sum":
-                oracle_in = oracle_in ** 2
-            err = percent_error(got, oracle_in)
+            got = run_gate(x32, op, plan)
+            err = percent_error(got, oracle_for(x32, op))
             ok = err <= ceiling
             mark = "ok  " if ok else "FAIL"
             print(f"{mark} {label:<14s} seed={seed} "

@@ -108,7 +108,7 @@ class ReductionPlan:
     exceeds the SLO is the visible best-effort fallback).
     """
     method: str   # 'mma' | 'mma_chained' | 'mma_ec' | 'pallas' |
-    #               'pallas_ec' | 'vpu'
+    #               'pallas_ec' | 'mma_dd' | 'pallas_dd' | 'vpu'
     variant: str = "single_pass"
     chain: int = 1
     block_rows: int = 128
@@ -442,6 +442,15 @@ def candidate_plans(n: int, dtype, *, chains=CHAINS, blocks=BLOCK_ROWS,
     for eng in spec.engines:
         if methods is not None and eng.name not in methods:
             continue
+        if policy is None and methods is None:
+            # No policy = the default f32 scalar contract (the dispatch
+            # ``_policy_reason`` rule): engines that cannot accumulate
+            # in float32 — the dd family, whose result is a (hi, lo)
+            # pair — never enter an *unrestricted* sweep.  An explicit
+            # ``engine=`` restriction naming them (the per-engine
+            # 'auto' geometry spellings) still enumerates.
+            if "float32" not in eng.accum_dtypes:
+                continue
         if policy is not None:
             # Policy capability facts prune the sweep itself, so every
             # enumeration path (dispatch auto, local_plan, direct
@@ -552,6 +561,18 @@ def _cost_ec(family: str, plan: ReductionPlan, n: int,
     return w * base + split + combine
 
 
+def _cost_dd(family: str, plan: ReductionPlan, n: int,
+             itemsize: int, *, grid_walk: bool = False) -> float:
+    # Double-double engines: the pairwise dd merge tree does ~n pair
+    # merges total (halving levels), each one pair ones-MMA plus ~10
+    # VPU ops (TwoSum residual, low-word fold, FastTwoSum
+    # renormalise) — about two chained passes of MMA work plus a dense
+    # VPU carry stream.
+    base = _cost_chained(family, plan, n, itemsize, grid_walk=grid_walk)
+    carry = 10.0 * n / (_VPU_THROUGHPUT * _PARALLELISM)
+    return 2.0 * base + carry
+
+
 # Per-engine scoring — keyed, not branched, so the only place engine
 # names select behaviour stays the dispatch registry.
 _ENGINE_COSTS = {
@@ -561,6 +582,8 @@ _ENGINE_COSTS = {
     "mma_ec": _cost_ec,
     "pallas": functools.partial(_cost_chained, grid_walk=True),
     "pallas_ec": functools.partial(_cost_ec, grid_walk=True),
+    "mma_dd": _cost_dd,
+    "pallas_dd": functools.partial(_cost_dd, grid_walk=True),
 }
 
 
@@ -578,6 +601,9 @@ _F32_BITS = 24
 # matrix-unit engine truncates f32 multiplicands to bf16 (TF32/bf16
 # MXU semantics).
 _COMPENSATED = frozenset({"mma_ec", "pallas_ec"})
+# The double-double family: unevaluated (hi, lo) f32 pairs carried via
+# TwoSum/TwoProd — no multiplicand truncation, O(eps32^2) per merge.
+_DOUBLE_DOUBLE = frozenset({"mma_dd", "pallas_dd"})
 _ENGINE_BITS = {"vpu": _F32_BITS, "mma_ec": None, "pallas_ec": None}
 
 
@@ -610,6 +636,14 @@ def model_percent_error(plan: ReductionPlan, n: int, dtype,
     (``measured_percent_error``).
     """
     n = max(int(n), 1)
+    if plan.method in _DOUBLE_DOUBLE:
+        # dd: no multiplicand truncation (full f32 words, f64 inputs
+        # split exactly on entry) and every pair merge is error-free
+        # to O(eps32^2) — what remains is ~log2(n) second-order
+        # renormalisation terms.  ~1e-11 % at 2^22: only this family
+        # fits under an f64-equivalent budget (~1e-10 %), while the
+        # compensated family floors at its 2^-25 final rounding.
+        return 100.0 * (2.0 ** -48) * (4.0 + math.log2(n))
     rep = 2.0 ** -(_multiplicand_bits(plan, dtype) + 1)
     if plan.method in _COMPENSATED:
         acc = _EPS32 * _EPS32 * n + 2.0 ** -25
@@ -619,15 +653,18 @@ def model_percent_error(plan: ReductionPlan, n: int, dtype,
 
 
 def measured_percent_error(plan: ReductionPlan, n: int, dtype, *,
-                           op: str = "reduce_sum",
-                           seed: int = 0) -> float:
+                           op: str = "reduce_sum", seed: int = 0,
+                           policy: PolicyArg = None) -> float:
     """Measured % error vs the fp64 oracle for one plan (the paper's
     harness, §5.4): a uniform-[0,1] problem — the paper's hard case —
     of the bucket size is executed under ``plan`` and compared against
-    the double-precision CPU sum.  Reduce-family only (scalar
-    contract); other families fall back to the analytical model.  The
-    probe is capped at 2^22 elements so a measured budget sweep stays
-    interactive."""
+    the double-precision CPU sum.  Reduce-family only; other families
+    fall back to the analytical model.  ``policy`` rides into the
+    executor so policy-gated plans (the dd family) pass their
+    capability check, and results collapse through
+    ``precision.dd_value`` — exact for scalars, hi+lo in f64 for the
+    dd pair.  The probe is capped at 2^22 elements so a measured
+    budget sweep stays interactive."""
     import numpy as np
     from repro.core import dispatch, precision
     spec = dispatch.op_spec(op)
@@ -636,7 +673,8 @@ def measured_percent_error(plan: ReductionPlan, n: int, dtype, *,
     probe_n = min(max(int(n), 1), 1 << 22)
     x64 = precision.uniform_input(probe_n, seed=seed)
     x = jax.numpy.asarray(x64.astype(np.float32)).astype(dtype)
-    got = float(execute_plan(x, plan, op=op))
+    kw = {} if policy is None else {"policy": policy}
+    got = precision.dd_value(execute_plan(x, plan, op=op, **kw))
     if op == "squared_sum":
         x64 = np.asarray(x, np.float64) ** 2
     else:
@@ -776,7 +814,8 @@ def _sharded_executor(plan: ReductionPlan, op: str, axes: tuple, x,
 
 def measure_cost(plan: ReductionPlan, n: int, dtype, *, iters: int = 5,
                  warmup: int = 2, seed: int = 0,
-                 op: str = "reduce_sum", mesh: MeshArg = None) -> float:
+                 op: str = "reduce_sum", mesh: MeshArg = None,
+                 policy: PolicyArg = None) -> float:
     """Wall-clock microseconds for one plan on this host's backend.
 
     The timed problem comes from the op's registry entry: an op with a
@@ -790,6 +829,10 @@ def measure_cost(plan: ReductionPlan, n: int, dtype, *, iters: int = 5,
     """
     axes = mesh_axes(mesh)
     x, kwargs = _measure_problem(op, n, dtype, seed)
+    if policy is not None:
+        # Policy-gated plans (the dd family) need their policy at
+        # execute time or the capability check refuses them.
+        kwargs = dict(kwargs, policy=policy)
     if axes is None:
         fn = lambda v: execute_plan(v, plan, op=op, **kwargs)
     else:
@@ -1146,7 +1189,7 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
                 f"autotune sweep for op={op!r} n={n} cancelled")
         if measure:
             cost = measure_cost(cand, measure_nb, dtype, op=op,
-                                mesh=axes)
+                                mesh=axes, policy=policy)
             cand = dataclasses.replace(cand, source="measured", cost=cost)
         else:
             cost = model_cost(cand, local_nb, dtype, op=op) + combine
@@ -1155,7 +1198,8 @@ def autotune(n: int, dtype, *, op: str = "reduce_sum",
             lat_us = cost if measure else cost * _MODEL_UNIT_US
             cand = dataclasses.replace(cand, latency_ms=lat_us / 1e3)
         if want_err:
-            err = (measured_percent_error(cand, local_nb, dtype, op=op)
+            err = (measured_percent_error(cand, local_nb, dtype, op=op,
+                                          policy=policy)
                    if measure else
                    model_percent_error(cand, local_nb, dtype, op=op))
             cand = dataclasses.replace(cand, error_pct=err)

@@ -12,9 +12,11 @@ place that knowledge lives: each op (``reduce_sum``, ``squared_sum``,
   * its execution engines (:class:`EngineSpec`): the ones-contraction
     ``'mma'``, the explicitly chained ``'mma_chained'`` core, the
     compensated split-bf16 ``'mma_ec'`` family (and its Pallas twin
-    ``'pallas_ec'``), the hand-tiled ``'pallas'`` kernel, and the
-    classic ``'vpu'`` baseline — each with a ``run(x, plan,
-    **op_kwargs)`` callable;
+    ``'pallas_ec'``), the double-double ``'mma_dd'`` family (and its
+    twin ``'pallas_dd'`` — f64-equivalent (hi, lo) pairs, reachable
+    only under an explicit ``accum_dtype=float64`` policy), the
+    hand-tiled ``'pallas'`` kernel, and the classic ``'vpu'`` baseline
+    — each with a ``run(x, plan, **op_kwargs)`` callable;
   * per-engine **capability predicates** — multi-device safety, axis /
     ndim / layout support, dtype restrictions, and the
     precision-policy facts (which accumulator dtypes the engine
@@ -190,6 +192,14 @@ def _policy_reason(eng: EngineSpec,
     full context check and plan resolvers that have no input array
     (``local_plan``)."""
     if policy is None:
+        # No policy means the default f32 *scalar* contract: an engine
+        # that cannot accumulate in float32 (the dd family, whose
+        # result is an unevaluated (hi, lo) pair, not a scalar) is
+        # only reachable through an explicit accum_dtype policy.
+        if "float32" not in eng.accum_dtypes:
+            return ("double-word engine: returns a (hi, lo) dd pair, "
+                    "not the default f32 scalar — request it with an "
+                    "explicit MmaPolicy(accum_dtype=jnp.float64)")
         return None
     acc = jnp.dtype(policy.accum_dtype).name
     if acc not in eng.accum_dtypes:
@@ -460,7 +470,15 @@ def dispatch(op: str, x, *, method: str = "auto", chain=None,
         if not legal:
             raise ValueError(f"no engine of op {op!r} supports this "
                              f"input: shape={ctx.shape}")
-        restrict = None if legal == spec.engine_names() else legal
+        # The engine tag marks restrictions *beyond* what the policy
+        # itself prunes from the sweep (``autotune.candidate_plans``
+        # applies ``_policy_reason`` too, and the policy is already in
+        # the key via ``|prec:``) — so a policy that merely gates the
+        # engine family (f32 vs the dd family) resolves under the
+        # untagged key, while mesh/axis/shape restrictions still tag.
+        sweepable = tuple(e.name for e in spec.engines
+                          if _policy_reason(e, policy) is None)
+        restrict = None if legal == sweepable else legal
         plan = autotune.get_plan(spec.problem_size(x, op_kwargs),
                                  x.dtype, op=op, engine=restrict,
                                  mesh=ctx.mesh_axes, policy=policy,
@@ -654,6 +672,28 @@ def _sq_pallas_ec(x, plan, **_):
     from repro.kernels import mma_ec_squared_sum
     return mma_ec_squared_sum(x, split_words=plan.split_words,
                               chain=plan.chain,
+                              block_rows=plan.block_rows)
+
+
+def _reduce_dd(x, plan, **_):
+    from repro.core import reduction as R
+    return R.tc_reduce_dd(x)
+
+
+def _reduce_pallas_dd(x, plan, **_):
+    from repro.kernels import mma_dd_reduce
+    return mma_dd_reduce(x, chain=plan.chain,
+                         block_rows=plan.block_rows)
+
+
+def _sq_dd(x, plan, **_):
+    from repro.core import reduction as R
+    return R.tc_reduce_dd(x, square=True)
+
+
+def _sq_pallas_dd(x, plan, **_):
+    from repro.kernels import mma_dd_squared_sum
+    return mma_dd_squared_sum(x, chain=plan.chain,
                               block_rows=plan.block_rows)
 
 
@@ -932,6 +972,15 @@ def _attention_cost(plan, n, dtype):
 #                policy split_words > 1.
 #   pallas       hand-tiled kernel: single-device, flatten-only.
 #   pallas_ec    hand-tiled twin of mma_ec (Kahan VMEM accumulators).
+#   mma_dd       double-double family (pure JAX): every partial an
+#                unevaluated (hi, lo) f32 pair via TwoSum/TwoProd,
+#                pair-granular ones-MMAs — f64-equivalent shape-(2,)
+#                result.  Declares accum_dtypes=('float64',): refused
+#                without an explicit f64 policy (and refuses f32
+#                policies with the reason).  Single-device,
+#                flatten-only.
+#   pallas_dd    hand-tiled twin of mma_dd (per-word TwoSum VMEM
+#                accumulator rows, (2, 1) output).
 #   vpu          classic baseline: safe everywhere.
 
 _REDUCE_ENGINES = (
@@ -943,6 +992,11 @@ _REDUCE_ENGINES = (
     EngineSpec("pallas", _reduce_pallas, sweep=("chain", "block_rows")),
     EngineSpec("pallas_ec", _reduce_pallas_ec, max_split_words=3,
                sweep=("chain", "block_rows", "split_words")),
+    EngineSpec("mma_dd", _reduce_dd, max_split_words=2,
+               accum_dtypes=("float64",)),
+    EngineSpec("pallas_dd", _reduce_pallas_dd, max_split_words=2,
+               accum_dtypes=("float64",),
+               sweep=("chain", "block_rows")),
     EngineSpec("vpu", _reduce_vpu, multi_device_safe=True,
                axis_subsets=True),
 )
@@ -962,6 +1016,11 @@ register(OpSpec(
         EngineSpec("pallas", _sq_pallas, sweep=("chain", "block_rows")),
         EngineSpec("pallas_ec", _sq_pallas_ec, max_split_words=3,
                    sweep=("chain", "block_rows", "split_words")),
+        EngineSpec("mma_dd", _sq_dd, max_split_words=2,
+                   accum_dtypes=("float64",)),
+        EngineSpec("pallas_dd", _sq_pallas_dd, max_split_words=2,
+                   accum_dtypes=("float64",),
+                   sweep=("chain", "block_rows")),
         EngineSpec("vpu", _sq_vpu, multi_device_safe=True,
                    axis_subsets=True),
     ),

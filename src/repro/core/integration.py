@@ -21,6 +21,11 @@ ladders here (``scripts/check.sh`` enforces that structurally).
            (paper-structured; benchmark/ablation path).
   'pallas' hand-tiled Pallas kernel (repro.kernels) — single-device hot
            paths; interpret=True on CPU.
+  'mma_dd' / 'pallas_dd' the double-double family (reduce_sum /
+           squared_sum): f64-equivalent (hi, lo) f32 pairs carried via
+           TwoSum/TwoProd; returns a shape-(2,) pair, so it is only
+           legal under an explicit ``MmaPolicy(accum_dtype=float64)``
+           — see docs/precision.md.
   'vpu'    plain jnp ops in f32 — the classic baseline the paper
            compares against (and the ablation switch).
 
@@ -50,7 +55,7 @@ import jax.numpy as jnp
 from repro.core import dispatch
 
 Method = Literal["auto", "mma", "mma_chained", "mma_ec", "pallas",
-                "pallas_ec", "vpu"]
+                "pallas_ec", "mma_dd", "pallas_dd", "vpu"]
 
 
 def _norm_axes(axis, ndim: int) -> Optional[tuple]:

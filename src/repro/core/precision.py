@@ -24,6 +24,13 @@ every numeric that feeds it:
     the ``mma_ec`` engines use to combine f32 MMA partials, so the
     combine stage contributes (second-order) ~eps^2 error instead of
     eps * log n.
+  * **double-double (dd) arithmetic** (``two_prod`` / ``fast_two_sum``
+    / ``dd_add`` / ``dd_value``): each value is an unevaluated
+    ``(hi, lo)`` f32 pair carried through the whole reduction via
+    TwoSum/TwoProd, so the ``mma_dd`` engine family delivers
+    f64-equivalent sums (~49 significand bits) from f32 hardware —
+    the multiple-double tensor-core arithmetic of arXiv:2607.06881.
+    ``F64_EQUIVALENT`` is the named budget tier that resolves it.
   * the paper's **fp64-oracle harness** (``percent_error`` /
     ``error_sweep``): % error of a reduction vs an FP64 CPU oracle on
     the paper's two input classes (Figs. 7/8 bottom rows).  The
@@ -47,14 +54,20 @@ import numpy as np
 __all__ = [
     "ACCUM_DTYPE",
     "EXACT_OFFSETS",
+    "F64_EQUIVALENT",
     "MmaPolicy",
     "as_policy",
     "compensated_sum",
+    "dd_add",
+    "dd_from_any",
+    "dd_value",
     "error_sweep",
+    "fast_two_sum",
     "fp64_oracle",
     "normal_input",
     "percent_error",
     "split_f32_words",
+    "two_prod",
     "two_sum",
     "uniform_input",
 ]
@@ -80,8 +93,15 @@ class MmaPolicy:
                            ``MmaPolicy(input_dtype=jnp.bfloat16)``.
     ``accum_dtype``        the C/D accumulator dtype.  The engine
                            capability predicates only admit engines
-                           that honour it (everything in this repo
-                           accumulates in f32 — ``ACCUM_DTYPE``).
+                           that honour it: the plain/ec families
+                           declare ``float32`` (``ACCUM_DTYPE``), the
+                           double-double ``mma_dd`` family declares
+                           ``float64`` (an unevaluated (hi, lo) f32
+                           pair with ~49 significand bits).  No policy
+                           means the default f32 scalar contract, so
+                           the dd family — whose result is a pair, not
+                           a scalar — is only reachable through an
+                           explicit f64 policy.
     ``split_words``        how many bf16 words an f32 multiplicand is
                            split into for the compensated ``mma_ec``
                            engines: 1 = no split (any engine), 2 =
@@ -149,6 +169,14 @@ class MmaPolicy:
 # below 2^24 under the f32-accumulator contract.
 EXACT_OFFSETS = MmaPolicy(input_dtype=jnp.float32,
                           mma_precision="highest")
+
+# The f64-equivalent budget tier (docs/precision.md): demands a
+# double-word accumulator AND a percent-error ceiling only the
+# double-double family's ~eps32^2 accumulation can meet — the plain
+# (~5e-4%) and compensated (~1e-5%) families both price out, so
+# ``method='auto'`` provably resolves ``mma_dd``/``pallas_dd``.
+F64_EQUIVALENT = MmaPolicy(accum_dtype=jnp.float64,
+                           error_budget_pct=1e-10)
 
 
 def as_policy(precision) -> Optional[MmaPolicy]:
@@ -233,6 +261,83 @@ def compensated_sum(v) -> jax.Array:
         err = err + jnp.sum(e)
         v = s
     return v[0] + err
+
+
+# ------------------------------------- double-double (dd) arithmetic
+#
+# An f64-equivalent value is carried as an unevaluated (hi, lo) f32
+# pair with |lo| <= ulp(hi)/2, per the multiple-double tensor-core
+# arithmetic of arXiv:2607.06881.  The transforms below are the
+# classic error-free building blocks; the ``mma_dd`` engines
+# (core/reduction.py tc_reduce_dd, kernels/mma_compensated.py dd_call)
+# express the hi-lane additions as pair-granular ones-MMA contractions
+# — a dot over a trailing axis of size 2 rounds exactly once, so it is
+# bit-identical to ``fl(a + b)`` and the TwoSum residual computed on
+# the VPU stays exact through the MMA.
+
+
+def fast_two_sum(a, b):
+    """Dekker FastTwoSum: ``s, e`` with ``s = fl(a + b)`` and
+    ``s + e == a + b`` exactly, REQUIRING ``|a| >= |b|`` (or a == 0).
+    One subtraction cheaper than :func:`two_sum`; used for dd
+    renormalisation where the ordering is known."""
+    s = a + b
+    return s, b - (s - a)
+
+
+# Dekker's splitter for f32 (24-bit significand): 2^12 + 1.
+_SPLIT_F32 = np.float32(4097.0)
+
+
+def two_prod(a, b):
+    """Error-free transform: ``p, e`` with ``p = fl(a * b)`` and
+    ``p + e == a * b`` exactly (Dekker TwoProd via the 2^12+1 split —
+    no FMA assumed).  Inputs are cast to f32; every f32 product is
+    exactly representable as hi*bhi + hi*blo + lo*bhi + lo*blo."""
+    a = jnp.asarray(a, ACCUM_DTYPE)
+    b = jnp.asarray(b, ACCUM_DTYPE)
+    p = a * b
+    ta = _SPLIT_F32 * a
+    ahi = ta - (ta - a)
+    alo = a - ahi
+    tb = _SPLIT_F32 * b
+    bhi = tb - (tb - b)
+    blo = b - bhi
+    e = ((ahi * bhi - p) + ahi * blo + alo * bhi) + alo * blo
+    return p, e
+
+
+def dd_add(hi_a, lo_a, hi_b, lo_b):
+    """Add two dd numbers: TwoSum on the high words, fold both low
+    words into the residual, then renormalise with FastTwoSum.
+    Error per operation is O(eps32^2) relative."""
+    s, e = two_sum(hi_a, hi_b)
+    return fast_two_sum(s, e + (lo_a + lo_b))
+
+
+def dd_from_any(x):
+    """Promote an array to elementwise dd pairs ``(hi, lo)``.
+
+    f32/bf16/f16 inputs convert exactly (lo = 0); f64 inputs (under
+    ``jax_enable_x64``) split into hi = f32(x) and the exact f32
+    residual, so a dd reduction of f64 data sees the full ~49-bit
+    significand the pair can carry."""
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) and \
+            jnp.asarray(x).dtype == jnp.dtype("float64"):
+        hi = x.astype(ACCUM_DTYPE)
+        lo = (x - hi.astype(x.dtype)).astype(ACCUM_DTYPE)
+        return hi, lo
+    hi = x.astype(ACCUM_DTYPE)
+    return hi, jnp.zeros_like(hi)
+
+
+def dd_value(out) -> float:
+    """Collapse an engine result to a Python float in f64.
+
+    Uniform for both the scalar engines (shape ``()``) and the dd
+    engines (shape ``(2,)`` — ``[hi, lo]``): cast to f64 and sum, so
+    the dd pair's low word contributes its full value."""
+    return float(np.asarray(out, dtype=np.float64).ravel().sum())
 
 
 # ---------------------------------------------- fp64-oracle harness

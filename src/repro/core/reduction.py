@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.precision import (ACCUM_DTYPE, compensated_sum,
-                                  split_f32_words)
+                                  dd_from_any, fast_two_sum,
+                                  split_f32_words, two_prod)
 
 DEFAULT_M = 128  # MXU tile (the paper's m; m=4 at GPU hw level, 16 in wmma)
 
@@ -189,6 +190,72 @@ def _tc_reduce_ec_impl(x, *, split_words: int, chain: int,
     lanes = [jnp.ravel(_mma_chain(_as_groups(w, chain, m)))
              for w in words]
     return compensated_sum(jnp.concatenate(lanes))
+
+
+def _dd_merge_tree(hi, lo):
+    """Pairwise double-double merge tree; returns the final (hi, lo).
+
+    Each halving level adds adjacent high words with a *pair-granular
+    ones-MMA*: a dot_general over a trailing axis of size 2 rounds
+    exactly once, so it is bit-identical to ``fl(a + b)`` and the
+    TwoSum residual computed on the VPU stays exact through the matrix
+    unit (the arXiv:2607.06881 trick at the smallest tile).  Low words
+    fold into the residual and the pair renormalises with FastTwoSum,
+    so each level contributes only O(eps32^2) relative error —
+    ~log2(n) * eps32^2 total, f64-equivalent for any practical n.
+    """
+    hi = jnp.ravel(hi).astype(ACCUM_DTYPE)
+    lo = jnp.ravel(lo).astype(ACCUM_DTYPE)
+    if hi.shape[0] == 0:
+        z = jnp.zeros((), ACCUM_DTYPE)
+        return z, z
+    ones_pair = jnp.ones((2,), dtype=ACCUM_DTYPE)
+    while hi.shape[0] > 1:
+        if hi.shape[0] % 2:
+            hi = jnp.pad(hi, (0, 1))
+            lo = jnp.pad(lo, (0, 1))
+        h2 = hi.reshape(-1, 2)
+        a, b = h2[:, 0], h2[:, 1]
+        # s = fl(a + b) via the batched pair ones-MMA.
+        s = lax.dot_general(
+            h2, ones_pair,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=ACCUM_DTYPE)
+        # Knuth TwoSum residual of that exact same rounding (VPU side).
+        bv = s - a
+        av = s - bv
+        e = (a - av) + (b - bv)
+        l2 = lo.reshape(-1, 2)
+        hi, lo = fast_two_sum(s, e + (l2[:, 0] + l2[:, 1]))
+    return hi[0], lo[0]
+
+
+def tc_reduce_dd(x, *, square: bool = False) -> jax.Array:
+    """Double-double reduction: returns a shape-(2,) f32 ``[hi, lo]``
+    pair whose (exact) sum is the f64-equivalent value of ``sum(x)``
+    (or ``sum(x*x)`` with ``square=True``).
+
+    The ``mma_dd`` engine (ROADMAP item 2, arXiv:2607.06881): every
+    partial is an unevaluated (hi, lo) f32 pair carried through the
+    whole pairwise merge tree via TwoSum/TwoProd — the high-word adds
+    ride pair-granular ones-MMAs (see ``_dd_merge_tree``), the
+    residuals stay on the VPU.  f64 inputs (under ``jax_enable_x64``)
+    split exactly into dd on entry, so input-representation error is
+    ~2^-48 relative, not 2^-24.  Collapse the pair with
+    ``repro.core.precision.dd_value`` (f64 hi + lo).
+    """
+    return _tc_reduce_dd_impl(x, square=bool(square))
+
+
+@functools.partial(jax.jit, static_argnames=("square",))
+def _tc_reduce_dd_impl(x, *, square: bool) -> jax.Array:
+    hi, lo = dd_from_any(x)
+    if square:
+        # dd square: (hi + lo)^2 = TwoProd(hi, hi) + 2 hi lo + lo^2.
+        p, e = two_prod(hi, hi)
+        hi, lo = fast_two_sum(p, e + (2.0 * hi * lo + lo * lo))
+    h, l = _dd_merge_tree(hi, lo)
+    return jnp.stack([h, l])
 
 
 def tc_contract(a, b) -> jax.Array:

@@ -6,6 +6,8 @@ Each kernel module contains the raw pl.pallas_call + BlockSpec code;
 
 from repro.kernels.mma_attention import mma_attention  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
+    mma_dd_reduce,
+    mma_dd_squared_sum,
     mma_ec_reduce,
     mma_ec_squared_sum,
     mma_reduce,

@@ -24,6 +24,13 @@ m)`` f32 VMEM tile and:
 
 All accumulators are f32 (``repro.core.precision.ACCUM_DTYPE``), per
 the paper's single-pass precision contract.
+
+``mma_dd_kernel`` / ``dd_call`` are the double-double twin (the
+``pallas_dd`` engine, kernel sibling of
+``repro.core.reduction.tc_reduce_dd``): every partial is an
+unevaluated (hi, lo) f32 pair carried via TwoSum/TwoProd, the VMEM
+accumulator holds one compensated f32 row per dd word, and the output
+is the f64-equivalent ``[hi, lo]`` pair itself (arXiv:2607.06881).
 """
 
 from __future__ import annotations
@@ -138,3 +145,114 @@ def ec_call(x2d, *, chain: int, block_rows: int, split_words: int,
                         pltpu.VMEM((split_words, m), ACCUM_DTYPE)],
         interpret=interpret,
     )(x2d)
+
+
+# ----------------------------------- double-double (pallas_dd) kernel
+
+# Dekker's f32 splitter (2^12 + 1) — the in-kernel copy of
+# ``repro.core.precision.two_prod``'s constant.
+_SPLIT_F32 = 4097.0
+
+
+def _fast_two_sum(a, b):
+    """Dekker FastTwoSum (requires |a| >= |b|): dd renormalisation."""
+    s = a + b
+    return s, b - (s - a)
+
+
+def _two_prod(a, b):
+    """Dekker TwoProd via the 2^12+1 split (in-kernel copy of
+    ``repro.core.precision.two_prod`` — no FMA assumed)."""
+    p = a * b
+    ta = _SPLIT_F32 * a
+    ahi = ta - (ta - a)
+    alo = a - ahi
+    tb = _SPLIT_F32 * b
+    bhi = tb - (tb - b)
+    blo = b - bhi
+    return p, ((ahi * bhi - p) + ahi * blo + alo * bhi) + alo * blo
+
+
+def _dd_pair_level(hi, lo, axis: int):
+    """One halving level of the dd merge tree along ``axis`` (0 or 1).
+
+    The high-word pair add rounds exactly once — bit-identical to the
+    pair-granular ones-MMA the core twin
+    (``repro.core.reduction.tc_reduce_dd``) routes through
+    ``dot_general`` — so the TwoSum residual computed here is exact;
+    both low words fold into it and the pair renormalises."""
+    if hi.shape[axis] % 2:
+        pad = ((0, 1), (0, 0)) if axis == 0 else ((0, 0), (0, 1))
+        hi = jnp.pad(hi, pad)
+        lo = jnp.pad(lo, pad)
+    if axis == 0:
+        a, b = hi[0::2, :], hi[1::2, :]
+        la, lb = lo[0::2, :], lo[1::2, :]
+    else:
+        a, b = hi[:, 0::2], hi[:, 1::2]
+        la, lb = lo[:, 0::2], lo[:, 1::2]
+    s, e = _two_sum(a, b)
+    return _fast_two_sum(s, e + (la + lb))
+
+
+def mma_dd_kernel(hi_ref, lo_ref, o_ref, acc_ref, *,
+                  square: bool = False):
+    """Double-double reduction: sequential grid, per-word (hi row 0 /
+    lo row 1) TwoSum-compensated ``(2, m)`` f32 VMEM accumulator.
+
+    Each grid step reduces its elementwise-dd tile with a pairwise dd
+    merge tree over rows (see ``_dd_pair_level``) to ``(1, m)`` dd
+    lanes, then dd-adds them into the persistent accumulator — the
+    generalisation of the ``mma_ec`` kernel's Kahan carry to a full
+    double word.  The last step collapses the lanes with the same dd
+    tree and writes the unevaluated ``[hi, lo]`` pair (a ``(2, 1)``
+    output), never re-rounding it through a final contraction.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    if square:
+        # dd square: (hi + lo)^2 = TwoProd(hi, hi) + 2 hi lo + lo^2.
+        p, e = _two_prod(hi, hi)
+        hi, lo = _fast_two_sum(p, e + (2.0 * hi * lo + lo * lo))
+    while hi.shape[0] > 1:
+        hi, lo = _dd_pair_level(hi, lo, 0)
+    # dd_add the tile's (1, m) lanes into the per-word accumulators.
+    s, e = _two_sum(acc_ref[0:1, :], hi)
+    nh, nl = _fast_two_sum(s, e + (acc_ref[1:2, :] + lo))
+    acc_ref[0:1, :] = nh
+    acc_ref[1:2, :] = nl
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _finish():
+        h = acc_ref[0:1, :]
+        low = acc_ref[1:2, :]
+        while h.shape[-1] > 1:
+            h, low = _dd_pair_level(h, low, 1)
+        o_ref[...] = jnp.concatenate([h, low], axis=0)
+
+
+def dd_call(hi2d, lo2d, *, chain: int, block_rows: int,
+            interpret: bool = False, square: bool = False):
+    """pallas_call wrapper: two (G*chain*block_rows, m) f32 planes
+    (elementwise dd hi/lo) -> (2, 1) f32 ``[[hi], [lo]]``."""
+    rows, m = hi2d.shape
+    tile_rows = chain * block_rows
+    grid = rows // tile_rows
+    assert grid * tile_rows == rows, (rows, tile_rows)
+    kernel = functools.partial(mma_dd_kernel, square=square)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile_rows, m), lambda i: (i, 0)),
+                  pl.BlockSpec((tile_rows, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 1), ACCUM_DTYPE),
+        scratch_shapes=[pltpu.VMEM((2, m), ACCUM_DTYPE)],
+        interpret=interpret,
+    )(hi2d, lo2d)

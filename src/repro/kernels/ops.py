@@ -181,6 +181,50 @@ def _mma_ec_impl(x, *, split_words: int, chain: int, block_rows: int,
     return out[0, 0]
 
 
+def mma_dd_reduce(x, *, chain=2, block_rows=128, m: int = MXU_M,
+                  interpret=None) -> jax.Array:
+    """Double-double reduction (Pallas ``pallas_dd`` engine): the
+    kernel twin of ``repro.core.reduction.tc_reduce_dd``.  Splits the
+    input into elementwise (hi, lo) f32 dd pairs (exactly, for f64
+    inputs under ``jax_enable_x64``), streams them through
+    ``kernels.mma_compensated.dd_call``'s per-word TwoSum-compensated
+    VMEM accumulator, and returns the f64-equivalent shape-(2,) f32
+    ``[hi, lo]`` pair — collapse it with
+    ``repro.core.precision.dd_value``.  ``chain``/``block_rows``
+    accept 'auto' (plan registry, engine ``'pallas_dd'``)."""
+    chain, block_rows = _resolve_auto(x, chain, block_rows,
+                                      op="reduce_sum",
+                                      engine="pallas_dd")
+    return _mma_dd_impl(x, chain=chain, block_rows=block_rows, m=m,
+                        square=False, interpret=interpret)
+
+
+def mma_dd_squared_sum(x, *, chain=2, block_rows=128, m: int = MXU_M,
+                       interpret=None) -> jax.Array:
+    """Double-double sum of squares: in-kernel TwoProd squares each dd
+    pair exactly, then reduces like ``mma_dd_reduce``.  Returns the
+    shape-(2,) ``[hi, lo]`` pair."""
+    chain, block_rows = _resolve_auto(x, chain, block_rows,
+                                      op="squared_sum",
+                                      engine="pallas_dd")
+    return _mma_dd_impl(x, chain=chain, block_rows=block_rows, m=m,
+                        square=True, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chain", "block_rows", "m", "square", "interpret"))
+def _mma_dd_impl(x, *, chain: int, block_rows: int, m: int,
+                 square: bool, interpret) -> jax.Array:
+    from repro.core.precision import dd_from_any
+    itp = _should_interpret(interpret)
+    hi, lo = dd_from_any(x)
+    hi2d = _to_tiles(hi, chain * block_rows, m)
+    lo2d = _to_tiles(lo, chain * block_rows, m)
+    out = _mc.dd_call(hi2d, lo2d, chain=chain, block_rows=block_rows,
+                      interpret=itp, square=square)
+    return out[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=(
     "chain", "block_rows", "m", "interpret"))
 def mma_reduce_partials(x, *, chain: int = 4, block_rows: int = 128,

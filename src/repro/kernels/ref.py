@@ -50,6 +50,15 @@ def ec_reduce_ref(x, *, split_words: int = 2,
         [jnp.ravel(p).astype(jnp.float32) for p in parts]))
 
 
+def dd_reduce_ref(x, *, square: bool = False) -> jax.Array:
+    """Double-double sum: the exact semantics of the ``mma_dd`` /
+    ``pallas_dd`` engines without the MMA/tile structure — promote to
+    elementwise (hi, lo) pairs, dd-merge pairwise, return the
+    shape-(2,) ``[hi, lo]`` f32 pair."""
+    from repro.core.reduction import tc_reduce_dd
+    return tc_reduce_dd(x, square=square)
+
+
 def ec_scan_ref(x, *, split_words: int = 2,
                 inclusive: bool = True) -> jax.Array:
     """f32 prefix sum of the word-split reconstruction — the pure-jnp

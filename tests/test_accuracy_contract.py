@@ -1,0 +1,270 @@
+"""Property-based accuracy contract for every reduce-family engine.
+
+The subsystem's numerical contract, asserted as data: for every
+``reduce_sum`` / ``squared_sum`` engine the registry declares
+(including both Pallas twins, interpret-mode on CPU), the percent
+error vs the fp64 oracle stays under a DOCUMENTED per-tier ceiling on
+five input distributions:
+
+  uniform            [0, 1) — the paper's benign case
+  normal             zero-mean — signed, mild cancellation
+  cancel             shuffled (+a, -a) pairs of magnitude ~1e4 around
+                     a pinned O(10) true sum — condition ~1e7, the
+                     compensation stress test
+  logspaced          signed magnitudes log-spaced over ~36 (reduce) /
+                     ~21 (squared) decades, up to 1e30 / 1e15
+  denormal_adjacent  tiny magnitudes a few decades above the f32
+                     underflow boundary — close enough to be "small",
+                     far enough that the compensation residuals
+                     (~value * eps32) themselves stay NORMAL.  Pushing
+                     the last ~7 decades to the boundary flushes the
+                     residuals to zero under XLA's FTZ and every
+                     compensated scheme (ec and dd alike) degrades to
+                     the plain f32 floor — that cliff is a documented
+                     limitation, not a testable contract.
+
+Tiers are read off the registry (accum_dtypes / max_split_words), so a
+new engine is automatically swept and must declare its tier honestly:
+
+  plain  f32 accumulation (mma, mma_chained, pallas, vpu)
+  ec     compensated split-bf16 (mma_ec, pallas_ec — default w2,
+         whose 16-bit representation floor dominates at small n)
+  dd     double-double (mma_dd, pallas_dd) — f64-equivalent,
+         <= 1e-10% everywhere but the 1e7-conditioned cancel set
+
+and the tiers ORDER pointwise — err_dd <= err_ec <= err_plain — once
+n is large enough (>= 2^16) that accumulation error dominates noise,
+with the ec representative in its exact-split w3 config (the default
+w2 split's representation floor is an orthogonal axis).
+
+Property-based cases run when ``hypothesis`` is installed; the
+deterministic parametrized sweep of the same invariants runs
+everywhere, so this module always collects.
+
+This file also PINS the oracle contract of
+``scripts/check_error_budget.py``: the fp64 oracle is built from the
+f32-CAST probe (accumulation error only), never from pre-cast f64
+data — no summation order can recover bits the input never had.
+"""
+
+import importlib.util
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+from repro.core import dispatch
+from repro.core import integration as ci
+from repro.core.precision import (F64_EQUIVALENT, MmaPolicy, dd_value,
+                                  percent_error)
+
+OPS = ("reduce_sum", "squared_sum")
+DISTRIBUTIONS = ("uniform", "normal", "cancel", "logspaced",
+                 "denormal_adjacent")
+SWEEP_SIZES = (1 << 8, 1 << 16)      # all engines, both Pallas twins
+BIG_N = 1 << 22                      # flat engines only (wall clock)
+BIG_N_ENGINES = ("mma", "vpu", "mma_ec", "mma_dd")
+SEEDS = (0, 1)
+
+# Documented percent-error ceilings vs the fp64 oracle, per
+# (tier, distribution), >= 20x headroom over the measured worst case
+# across both ops, sizes to 2^22, and two seeds (see docs/precision.md).
+CEILING_PCT = {
+    "plain": {"uniform": 5.0, "normal": 5.0, "logspaced": 5.0,
+              "denormal_adjacent": 20.0, "cancel": 2e4},
+    "ec": {"uniform": 1e-3, "normal": 1e-1, "logspaced": 5e-2,
+           "denormal_adjacent": 1e-2, "cancel": 50.0},
+    "dd": {"uniform": 1e-10, "normal": 1e-10, "logspaced": 1e-10,
+           "denormal_adjacent": 1e-10, "cancel": 1e-4},
+}
+
+W3 = MmaPolicy(split_words=3)        # exact-split ec config
+
+
+def engine_tier(eng: dispatch.EngineSpec) -> str:
+    """plain | ec | dd, read off the engine's declared capabilities."""
+    if "float32" not in eng.accum_dtypes:
+        return "dd"
+    return "ec" if eng.max_split_words > 1 else "plain"
+
+
+def make_input(dist: str, op: str, n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if dist == "uniform":
+        x = rng.random(n)
+    elif dist == "normal":
+        x = rng.normal(size=n)
+    elif dist == "cancel":
+        k = max((n - 16) // 2, 0)
+        a = rng.normal(size=k) * 1e4
+        x = rng.permutation(
+            np.concatenate([a, -a, np.ones(n - 2 * k)]))
+    elif dist == "logspaced":
+        # squared_sum squares the magnitudes: cap the decade range so
+        # x^2 stays inside f32 (1e30 -> 1e60 would overflow)
+        hi = 30.0 if op == "reduce_sum" else 15.0
+        x = 10.0 ** rng.uniform(-6.0, hi, n) \
+            * rng.choice([-1.0, 1.0], n) + 1.0
+    elif dist == "denormal_adjacent":
+        # chosen so value * eps32 (the compensation residual) stays a
+        # NORMAL f32 — for squared_sum that constraint applies to x^2
+        lo, hi = (-30.0, -27.0) if op == "reduce_sum" else (-14.0, -12.0)
+        x = rng.random(n) * 10.0 ** rng.uniform(lo, hi, n)
+    else:  # pragma: no cover - parametrization is closed
+        raise ValueError(dist)
+    return x.astype(np.float32)
+
+
+def oracle_input(x32: np.ndarray, op: str) -> np.ndarray:
+    oracle_in = x32.astype(np.float64)
+    return oracle_in ** 2 if op == "squared_sum" else oracle_in
+
+
+def engine_error(op: str, x32: np.ndarray, method: str,
+                 precision=None) -> float:
+    """Percent error of one engine vs the fp64 oracle of the f32-cast
+    input (dd engines run under the f64-equivalent policy and their
+    (hi, lo) pair collapses through dd_value — a no-op for scalars)."""
+    fn = ci.reduce_sum if op == "reduce_sum" else ci.squared_sum
+    out = fn(jnp.asarray(x32), method=method, precision=precision)
+    return percent_error(dd_value(out), oracle_input(x32, op))
+
+
+# ------------------------------------------------------- tier ceilings
+
+
+@pytest.mark.parametrize("n", SWEEP_SIZES)
+@pytest.mark.parametrize("dist", DISTRIBUTIONS)
+@pytest.mark.parametrize("op", OPS)
+def test_every_engine_meets_tier_ceiling(op, dist, n):
+    """Every registered engine — both Pallas twins included — stays
+    under its tier's documented ceiling on every distribution."""
+    spec = dispatch.op_spec(op)
+    for seed in SEEDS:
+        x32 = make_input(dist, op, n, seed)
+        for eng in spec.engines:
+            tier = engine_tier(eng)
+            prec = F64_EQUIVALENT if tier == "dd" else None
+            err = engine_error(op, x32, eng.name, prec)
+            ceiling = CEILING_PCT[tier][dist]
+            assert err <= ceiling, \
+                (op, dist, n, seed, eng.name, tier, err, ceiling)
+
+
+@pytest.mark.parametrize("dist", DISTRIBUTIONS)
+@pytest.mark.parametrize("op", OPS)
+def test_flat_engines_meet_ceiling_at_2_22(op, dist):
+    """The ceilings hold out to 2^22 elements (one engine per tier
+    plus the baseline — the Pallas twins share their jnp twins'
+    accumulation structure and are swept at SWEEP_SIZES)."""
+    spec = dispatch.op_spec(op)
+    x32 = make_input(dist, op, BIG_N, 0)
+    for name in BIG_N_ENGINES:
+        tier = engine_tier(spec.engine(name))
+        prec = F64_EQUIVALENT if tier == "dd" else None
+        err = engine_error(op, x32, name, prec)
+        ceiling = CEILING_PCT[tier][dist]
+        assert err <= ceiling, (op, dist, name, tier, err, ceiling)
+
+
+# ------------------------------------------------------- tier ordering
+
+
+@pytest.mark.parametrize("dist", DISTRIBUTIONS)
+@pytest.mark.parametrize("op", OPS)
+def test_tier_ordering_dd_below_ec_below_plain(op, dist):
+    """err_dd <= err_ec <= err_plain pointwise once accumulation error
+    dominates (n >= 2^16); ec in its exact-split w3 config so the
+    comparison isolates ACCUMULATION quality (w2's representation
+    floor would otherwise let plain f32 win at small error scales)."""
+    for n in (1 << 16, BIG_N):
+        for seed in SEEDS:
+            if n == BIG_N and seed != 0:
+                continue
+            x32 = make_input(dist, op, n, seed)
+            err_plain = engine_error(op, x32, "mma")
+            err_ec = engine_error(op, x32, "mma_ec", W3)
+            err_dd = engine_error(op, x32, "mma_dd", F64_EQUIVALENT)
+            assert err_dd <= err_ec <= err_plain, \
+                (op, dist, n, seed, err_dd, err_ec, err_plain)
+
+
+# --------------------------------------- the oracle-contract pin (CI)
+
+
+def _load_error_budget_module():
+    path = pathlib.Path(__file__).resolve().parent.parent \
+        / "scripts" / "check_error_budget.py"
+    spec = importlib.util.spec_from_file_location("check_error_budget",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_error_budget_oracle_built_from_f32_cast_input():
+    """PINS scripts/check_error_budget.py's oracle contract: the fp64
+    oracle comes from the f32-CAST probe (accumulation error only).
+    If the harness is ever rewired to build it from pre-cast f64 data
+    — charging engines for representation error no summation order
+    can recover — this fails."""
+    mod = _load_error_budget_module()
+    # bits beyond f32: the pre-cast f64 sum differs from the cast one
+    x64 = np.random.default_rng(5).random(4096) + 1e-9
+    x32 = x64.astype(np.float32)
+    assert float(np.sum(x64)) != float(np.sum(x32.astype(np.float64)))
+    got = mod.oracle_for(x32, "reduce_sum")
+    np.testing.assert_array_equal(got, x32.astype(np.float64))
+    sq = mod.oracle_for(x32, "squared_sum")
+    np.testing.assert_array_equal(sq, x32.astype(np.float64) ** 2)
+    # the contract is typed, not advisory: pre-cast data is rejected
+    with pytest.raises(TypeError, match="f32-cast"):
+        mod.oracle_for(x64, "reduce_sum")
+
+
+def test_error_budget_gates_cover_the_dd_family():
+    """The CI gate sweeps dd plans for both ops at the f64-equivalent
+    ceiling (<= 1e-10%)."""
+    mod = _load_error_budget_module()
+    dd_rows = [(op, plan.method, ceiling)
+               for _, op, plan, ceiling in mod.GATES
+               if plan.method in ("mma_dd", "pallas_dd")]
+    assert {(op, m) for op, m, _ in dd_rows} == {
+        ("reduce_sum", "mma_dd"), ("reduce_sum", "pallas_dd"),
+        ("squared_sum", "mma_dd"), ("squared_sum", "pallas_dd")}
+    assert all(c <= 1e-10 for _, _, c in dd_rows), dd_rows
+
+
+# ------------------------------------------------- property-based lane
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.sampled_from([1 << k for k in range(10, 18)]),
+           st.integers(0, 2**31), st.sampled_from(["uniform", "normal"]))
+    def test_dd_is_f64_equivalent_any_seed(n, seed, dist):
+        """dd stays <= 1e-10% for arbitrary seeds on the statistical
+        distributions (pow2 sizes bound the jit-compile set)."""
+        x32 = make_input(dist, "reduce_sum", n, seed)
+        err = engine_error("reduce_sum", x32, "mma_dd", F64_EQUIVALENT)
+        assert err <= 1e-10, (n, seed, dist, err)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.sampled_from([1 << 16, 1 << 17]),
+           st.integers(0, 2**31), st.sampled_from(["uniform", "normal"]))
+    def test_tier_ordering_any_seed(n, seed, dist):
+        x32 = make_input(dist, "reduce_sum", n, seed)
+        err_plain = engine_error("reduce_sum", x32, "mma")
+        err_ec = engine_error("reduce_sum", x32, "mma_ec", W3)
+        err_dd = engine_error("reduce_sum", x32, "mma_dd",
+                              F64_EQUIVALENT)
+        assert err_dd <= err_ec <= err_plain, \
+            (n, seed, err_dd, err_ec, err_plain)

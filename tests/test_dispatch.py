@@ -74,6 +74,14 @@ def test_every_engine_matches_oracle(op, dtype, fresh_plan_registry):
     want = np.asarray(spec.reference(x, **kw), dtype=np.float64)
     spellings = spec.engine_names() + tuple(spec.aliases or ()) + ("auto",)
     for method in spellings:
+        eng = spec.engine(method)
+        if eng is not None and \
+                dispatch._policy_reason(eng, None) is not None:
+            # Policy-gated engine (the dd family): unreachable without
+            # an explicit accum_dtype policy — refusal IS the contract.
+            with pytest.raises(ValueError, match="policy|accum|pair"):
+                dispatch.dispatch(op, x, method=method, **kw)
+            continue
         got = np.asarray(dispatch.dispatch(op, x, method=method, **kw))
         np.testing.assert_allclose(got, want, err_msg=f"{op}/{method}",
                                    **_tol(dtype))
@@ -85,6 +93,13 @@ def test_every_engine_matches_oracle_under_jit(op, fresh_plan_registry):
     x, kw = _op_inputs(op)
     want = np.asarray(spec.reference(x, **kw), dtype=np.float64)
     for method in spec.engine_names() + ("auto",):
+        eng = spec.engine(method)
+        if eng is not None and \
+                dispatch._policy_reason(eng, None) is not None:
+            with pytest.raises(ValueError, match="policy|accum|pair"):
+                jax.jit(lambda v, m=method: dispatch.dispatch(
+                    op, v, method=m, **kw))(x)
+            continue
         fn = jax.jit(lambda v, m=method: dispatch.dispatch(
             op, v, method=m, **kw))
         got = np.asarray(fn(x))
@@ -374,12 +389,21 @@ def test_attention_capability_predicates(fresh_plan_registry):
 
 
 def test_candidate_plans_follow_registry():
-    """The autotuner's sweep space is the registry's engine space."""
+    """The autotuner's sweep space is the registry's engine space —
+    minus the policy-gated engines (the dd family) on an unrestricted
+    no-policy sweep, where the default f32-scalar contract holds."""
     for op in dispatch.ops():
         spec = dispatch.op_spec(op)
         methods = {p.method for p in
                    autotune.candidate_plans(1 << 16, jnp.float32, op=op)}
-        assert methods == set(spec.engine_names()), op
+        sweepable = {e.name for e in spec.engines
+                     if dispatch._policy_reason(e, None) is None}
+        assert methods == sweepable, op
+        # an explicit engine restriction still enumerates gated engines
+        for eng in spec.engines:
+            assert {p.method for p in autotune.candidate_plans(
+                1 << 16, jnp.float32, op=op,
+                engine=(eng.name,))} == {eng.name}, (op, eng.name)
     # expert_counts is row-wise: exactly the contraction + baseline
     assert {p.method for p in autotune.candidate_plans(
         1 << 16, jnp.float32, op="expert_counts")} == {"mma", "vpu"}

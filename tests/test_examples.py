@@ -1,0 +1,36 @@
+"""Smoke tests for the runnable examples.
+
+``examples/integrate.py`` flips ``jax_enable_x64`` at import — a
+process-global switch that would leak into every other test in this
+interpreter — so it runs in a subprocess, exactly as a user invokes
+it.  The assertions are the example's own accuracy gates: exit status
+0 means the dd engines passed the 1e-12 relative-error gate AND the
+f32/compensated baselines demonstrably failed it (the gate separates
+the tiers; see the example's ``main``).
+"""
+
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_integrate_example_gates_pass():
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    p = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "examples",
+                                      "integrate.py")],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert p.returncode == 0, (p.stdout[-3000:], p.stderr[-3000:])
+    assert "ACCURACY GATE: PASS" in p.stdout, p.stdout[-3000:]
+    # the quadrature table shows the separation, not just the pass:
+    # dd under the gate, both f32-scalar baselines over it
+    lines = p.stdout.splitlines()
+    assert any("mma_dd family" in ln and "PASS" in ln for ln in lines)
+    assert any(ln.strip().startswith("mma (f32 scalar)") and "FAIL"
+               in ln for ln in lines), p.stdout[-3000:]
+    assert any("mma_ec (compensated)" in ln and "FAIL" in ln
+               for ln in lines), p.stdout[-3000:]
+    # and auto resolved a dd plan under the untagged |prec: key
+    assert any("prec:any.float64.b1e-10" in ln for ln in lines)

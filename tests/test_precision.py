@@ -405,3 +405,131 @@ def test_collectives_single_device_honour_policy(fresh_plan_registry):
     keys = [k for k, _ in autotune.default_registry().items()]
     assert any("|prec:" in k for k in keys), keys
     autotune.reset_default_registry()
+
+
+# =============== double-double: the f64-equivalent tier ===============
+
+
+def test_two_sum_is_bitwise_error_free():
+    """Knuth TwoSum (branch-free, the dd carry primitive): s is
+    EXACTLY fl(a+b) and s + e is EXACTLY a + b — bitwise, elementwise,
+    across 12 decades of misaligned exponents (f64 holds the 48-bit
+    exact sum of two f32s, so the check is equality, not closeness)."""
+    from repro.core.precision import two_sum
+    rng = np.random.default_rng(11)
+    a32 = (rng.normal(size=4_096) *
+           10.0 ** rng.uniform(-6, 6, 4_096)).astype(np.float32)
+    b32 = (rng.normal(size=4_096) *
+           10.0 ** rng.uniform(-6, 6, 4_096)).astype(np.float32)
+    s, e = two_sum(jnp.asarray(a32), jnp.asarray(b32))
+    s, e = np.asarray(s), np.asarray(e)
+    np.testing.assert_array_equal(s, a32 + b32)          # s == fl(a+b)
+    np.testing.assert_array_equal(                       # s + e exact
+        s.astype(np.float64) + e.astype(np.float64),
+        a32.astype(np.float64) + b32.astype(np.float64))
+
+
+def test_two_prod_is_bitwise_error_free():
+    """Dekker TwoProd with the f32 splitter 4097 = 2^12 + 1: p is
+    EXACTLY fl(a*b) and p + e is EXACTLY a * b (a 48-bit product, f64-
+    representable)."""
+    from repro.core.precision import two_prod
+    rng = np.random.default_rng(12)
+    a32 = (rng.normal(size=4_096) *
+           10.0 ** rng.uniform(-6, 6, 4_096)).astype(np.float32)
+    b32 = (rng.normal(size=4_096) *
+           10.0 ** rng.uniform(-6, 6, 4_096)).astype(np.float32)
+    p, e = two_prod(jnp.asarray(a32), jnp.asarray(b32))
+    p, e = np.asarray(p), np.asarray(e)
+    np.testing.assert_array_equal(p, a32 * b32)          # p == fl(a*b)
+    np.testing.assert_array_equal(
+        p.astype(np.float64) + e.astype(np.float64),
+        a32.astype(np.float64) * b32.astype(np.float64))
+
+
+def test_fast_two_sum_exact_when_ordered():
+    """Dekker FastTwoSum is error-free under its |a| >= |b| premise —
+    the dd renormalisation step."""
+    from repro.core.precision import fast_two_sum
+    rng = np.random.default_rng(13)
+    a32 = (rng.normal(size=2_048) * 1e4).astype(np.float32)
+    b32 = rng.normal(size=2_048).astype(np.float32)     # |b| << |a|
+    s, e = fast_two_sum(jnp.asarray(a32), jnp.asarray(b32))
+    np.testing.assert_array_equal(
+        np.asarray(s).astype(np.float64) +
+        np.asarray(e).astype(np.float64),
+        a32.astype(np.float64) + b32.astype(np.float64))
+
+
+def test_f64_budget_auto_resolves_mma_dd(fresh_plan_registry):
+    """Under the f64-equivalent tier (accum_dtype=f64, budget 1e-10%)
+    every f32-scalar engine is either policy-illegal or over budget in
+    the model, so method='auto' provably resolves the dd family —
+    asserted via plan-key inspection (the template of
+    test_budget_constrained_auto_resolves_mma_ec, one tier down)."""
+    from repro.core.precision import F64_EQUIVALENT, dd_value
+    autotune.reset_default_registry()
+    n = 1 << 20
+    # the premise, in the model's own terms: the best compensated
+    # engine floors six decades above the dd budget
+    assert autotune.model_percent_error(
+        autotune.ReductionPlan(method="mma_ec", split_words=3),
+        n, jnp.float32) > 1e-10
+    assert autotune.model_percent_error(
+        autotune.ReductionPlan(method="mma_dd"), n, jnp.float32) <= 1e-10
+    x = jnp.asarray(uniform_input(n, seed=5).astype(np.float32))
+    out = ci.reduce_sum(x, method="auto", precision=F64_EQUIVALENT)
+    assert out.shape == (2,)                 # the (hi, lo) pair
+    reg = autotune.default_registry()
+    key = autotune.plan_key("reduce_sum", n, jnp.float32,
+                            policy=F64_EQUIVALENT)
+    plan = reg.get(key)
+    assert plan is not None, [k for k, _ in reg.items()]
+    assert plan.method in ("mma_dd", "pallas_dd"), plan
+    assert plan.error_pct is not None and plan.error_pct <= 1e-10
+    # and the pair is worth carrying: f64-equivalent vs the oracle
+    err = percent_error(dd_value(out),
+                        np.asarray(x).astype(np.float64))
+    assert err <= 1e-10, err
+    autotune.reset_default_registry()
+
+
+def test_dd_refusals_name_the_reason():
+    """The dd family is policy-gated both ways: without a policy the
+    engines refuse (they return a pair, not the default f32 scalar);
+    under the f64 policy every scalar engine refuses naming
+    accum_dtype — and the legal set is exactly the dd family."""
+    from repro.core.precision import F64_EQUIVALENT
+    x = jnp.ones((4_096,), jnp.float32)
+    for eng in ("mma_dd", "pallas_dd"):
+        with pytest.raises(ValueError, match="hi, lo"):
+            ci.reduce_sum(x, method=eng)
+        with pytest.raises(ValueError, match="hi, lo"):
+            ci.squared_sum(x, method=eng)
+    for eng in ("mma", "mma_chained", "pallas", "vpu", "mma_ec"):
+        with pytest.raises(ValueError, match="accum_dtype"):
+            ci.reduce_sum(x, method=eng, precision=F64_EQUIVALENT)
+    spec = dispatch.op_spec("reduce_sum")
+    ctx = dispatch.build_context("reduce_sum", x,
+                                 policy=F64_EQUIVALENT)
+    assert dispatch.legal_engines(spec, ctx) == ("mma_dd", "pallas_dd")
+
+
+def test_plan_key_prec_lat_mesh_composition():
+    """The full suffix grammar composes in its fixed order —
+    [engine][|prec:][|lat:][|mesh:] — with the f64-equivalent policy
+    in the prec slot."""
+    from repro.core.precision import F64_EQUIVALENT
+    key = autotune.plan_key("reduce_sum", 2**20, jnp.float32,
+                            engine=("mma_dd", "pallas_dd"),
+                            policy=F64_EQUIVALENT,
+                            objective=0.25, mesh="data4.model2")
+    assert key.endswith("|mma_dd+pallas_dd"
+                        "|prec:any.float64.b1e-10"
+                        "|lat:slo0.25ms|mesh:data4.model2"), key
+    # each suffix is independent: dropping the objective drops |lat:
+    no_lat = autotune.plan_key("reduce_sum", 2**20, jnp.float32,
+                               engine=("mma_dd", "pallas_dd"),
+                               policy=F64_EQUIVALENT,
+                               mesh="data4.model2")
+    assert "|lat:" not in no_lat and "|prec:" in no_lat, no_lat
