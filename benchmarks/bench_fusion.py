@@ -1,0 +1,160 @@
+"""Fused norm->matmul benchmark: one-kernel epilogue vs two-op path.
+
+Times the ``norm_matmul`` op's three engines through the dispatch
+layer on the two serving-shaped problems the fusion targets:
+
+  * prefill — the MLP up/gate block boundary at (B=4, S=256, d=256,
+    d_out=1024, silu gate): rmsnorm statistic + twin projections in
+    one kernel;
+  * decode  — the continuous-engine step shape (B=num_slots=4, S=1,
+    d=256, d_out=1024, no gate): the MLA absorbed-form projection
+    geometry where the unfused path's normalized-activation round
+    trip is pure overhead per token.
+
+Three currencies per shape (see benchmarks/common.py's context note —
+this container is CPU-only and the Pallas kernel runs in interpret
+mode, whose fixed interpreter overhead dominates at decode scale, so
+the ``*_us`` wall-clock rows are a bit-rot/regression tripwire, not
+the perf claim):
+
+  * ``*_us``      — measured XLA-CPU wall-clock per engine (tripwire);
+  * ``*_cost``    — the registered ``norm_matmul`` family cost hook in
+    paper model units (launches + VPU passes + memory passes around a
+    shared MMA term), the SAME arbiter ``method='auto'`` ranks engines
+    with — fused < unfused on both shapes because fusion deletes one
+    VPU normalize pass and one memory round trip;
+  * ``*_hbm_kb``  — activation/weight HBM traffic accounting: the
+    unfused two-op path reads x twice (statistic + normalize), then
+    writes AND re-reads the normalized activations before the matmul;
+    the fused kernel reads x once and never materializes them.
+
+``run`` also resolves ``method='auto'`` against a fresh in-memory plan
+registry under a loose (0.5%) and a punishing (1e-4%) error budget and
+records which engine each budget admits (``auto_method_*`` — the
+fused-vs-unfused arbitration proof, also pinned by
+tests/test_dispatch.py).  Besides the CSV rows, ``run`` writes
+``BENCH_fusion.json`` at the repo root — scripts/check.sh verifies the
+file parses with the required keys and that the fused engine beats the
+unfused two-op path on the decode shape in both model-cost and HBM
+traffic.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+JSON_KEYS = ("prefill_fused_us", "prefill_unfused_us",
+             "prefill_vpu_us", "decode_fused_us", "decode_unfused_us",
+             "decode_vpu_us", "prefill_fused_cost",
+             "prefill_unfused_cost", "decode_fused_cost",
+             "decode_unfused_cost", "prefill_fused_hbm_kb",
+             "prefill_unfused_hbm_kb", "decode_fused_hbm_kb",
+             "decode_unfused_hbm_kb")
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_fusion.json")
+
+PREFILL = dict(rows=1024, d=256, dout=1024, gate=True)
+DECODE = dict(rows=4, d=256, dout=1024, gate=False)
+
+_ENGINES = (("fused_pallas", "fused"), ("unfused_mma", "unfused"),
+            ("vpu", "vpu"))
+
+
+def _problem(shape, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+
+    def t(*s):
+        return jnp.asarray(rng.normal(size=s).astype(np.float32))
+
+    x = t(shape["rows"], shape["d"])
+    kw = dict(w=t(shape["d"], shape["dout"]) / np.sqrt(shape["d"]),
+              scale=t(shape["d"]) * 0.1, eps=1e-6)
+    if shape["gate"]:
+        kw.update(w_gate=t(shape["d"], shape["dout"])
+                  / np.sqrt(shape["d"]), act="silu")
+    return x, kw
+
+
+def _hbm_kb(shape, fused: bool, itemsize: int = 4) -> float:
+    """Activation/weight HBM traffic of one call in KB.  Both paths
+    read the weights and write the output once; the unfused two-op
+    path additionally reads x a second time (normalize pass after the
+    statistic pass) and writes + re-reads the (rows, d) normalized
+    activations the fused kernel keeps in VMEM."""
+    rows, d, dout = shape["rows"], shape["d"], shape["dout"]
+    nw = 2 if shape["gate"] else 1
+    x_b, w_b, o_b = rows * d, nw * d * dout, rows * dout
+    total = x_b + w_b + o_b
+    if not fused:
+        total += 3 * x_b     # second x read + xh write + xh read
+    return total * itemsize / 1024.0
+
+
+def run(write_json: bool = True) -> dict:
+    import jax
+
+    from benchmarks.common import emit, time_us
+    from repro.core import autotune, dispatch
+    from repro.core.autotune import ReductionPlan
+    from repro.core.precision import MmaPolicy
+
+    spec = dispatch.op_spec("norm_matmul")
+    out = {}
+
+    for label, shape in (("prefill", PREFILL), ("decode", DECODE)):
+        x, kw = _problem(shape, seed=0 if label == "prefill" else 1)
+        derived = (f"rows={shape['rows']};d={shape['d']};"
+                   f"dout={shape['dout']};gate={shape['gate']}")
+        # single-k-block geometry (the plan the sweep converges to at
+        # these d-model sizes: fewer launches in the family cost model)
+        fused_plan = ReductionPlan(method="fused_pallas", chain=4,
+                                   block_rows=shape["d"])
+        for eng, short in _ENGINES:
+            if eng == "fused_pallas":
+                fn = jax.jit(lambda x: dispatch.execute(
+                    "norm_matmul", x, fused_plan, **kw))
+            else:
+                fn = jax.jit(lambda x, e=eng: dispatch.dispatch(
+                    "norm_matmul", x, method=e, **kw))
+            us = time_us(fn, x, iters=5, warmup=2)
+            out[f"{label}_{short}_us"] = us
+            emit(f"fusion/{label}_{eng}", us, derived)
+            if short != "vpu":
+                plan = fused_plan if short == "fused" \
+                    else ReductionPlan(method=eng)
+                cost = float(spec.cost(plan, x.size, x.dtype))
+                out[f"{label}_{short}_cost"] = cost
+                out[f"{label}_{short}_hbm_kb"] = _hbm_kb(
+                    shape, fused=short == "fused")
+                emit(f"fusion/{label}_{eng}_model", cost,
+                     f"cost_units;hbm_kb="
+                     f"{out[f'{label}_{short}_hbm_kb']:.0f}")
+
+    # method='auto' arbitration under the error budget, against a
+    # fresh in-memory registry (the committed artifact's record of the
+    # fused-vs-unfused decision; tests pin the same behavior)
+    x, _ = _problem(DECODE, seed=1)
+    reg = autotune.PlanRegistry()
+    for tag, budget in (("b0_5", 0.5), ("b1e_4", 1e-4)):
+        plan = autotune.get_plan(
+            x.size, x.dtype, op="norm_matmul", registry=reg,
+            policy=MmaPolicy(error_budget_pct=budget))
+        out[f"auto_method_{tag}"] = plan.method
+        emit(f"fusion/auto_{tag}", 0.0, f"method={plan.method}")
+
+    out.update(prefill=PREFILL, decode=DECODE,
+               backend=jax.default_backend())
+    if write_json:
+        with open(_JSON_PATH, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

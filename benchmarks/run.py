@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   dispatch    — TC-op registry overhead (eager/jit/auto/decision)
   attention   — fused flash-attention kernel vs unfused/vpu engines
                 (prefill + decode shapes; writes BENCH_attention.json)
+  fusion      — fused norm->matmul epilogue vs unfused two-op path
+                (wall-clock + model cost + HBM traffic per engine;
+                writes BENCH_fusion.json)
   precision   — Fig. 7 bottom / Fig. 8 right (% error vs FP64 oracle)
   serve       — continuous-batching engine (prefill/decode tok/s,
                 p50/p99 step latency; also writes BENCH_serve.json)
@@ -24,15 +27,16 @@ import sys
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_attention, bench_dispatch,
-                            bench_precision, bench_rb_sweep,
-                            bench_reduction, bench_scan, bench_serve,
-                            bench_split)
+                            bench_fusion, bench_precision,
+                            bench_rb_sweep, bench_reduction,
+                            bench_scan, bench_serve, bench_split)
     bench_reduction.run()
     bench_rb_sweep.run()
     bench_split.run()
     bench_scan.run()
     bench_dispatch.run()
     bench_attention.run()
+    bench_fusion.run()
     bench_precision.run()
     bench_serve.run()
 

@@ -38,6 +38,13 @@
 #            bench_attention.py) parses with the fused/unfused/vpu
 #            prefill+decode timings — a stale or hand-mangled artifact
 #            fails here;
+#   fusion   BENCH_fusion.json (benchmarks/bench_fusion.py) parses
+#            with the norm->matmul engine timings, model costs and HBM
+#            traffic, the fused engine beats the unfused two-op path
+#            on the decode shape in both model-cost and HBM-traffic
+#            currencies, and the recorded method='auto' arbitration
+#            picks fused under the loose budget / unfused under the
+#            punishing one;
 #   atomicio structural guard: src/repro/core/autotune.py must not
 #            contain a raw `open(..., 'w')` write — the plan store is
 #            written only via the atomic temp-file + os.replace path
@@ -136,6 +143,51 @@ if missing or bad:
         f"non-positive {bad} — regenerate with "
         f"PYTHONPATH=src:. python benchmarks/bench_attention.py")
 print("ok: BENCH_attention.json parses with", ", ".join(JSON_KEYS))
+PY
+
+echo "== fusion bench artifact =="
+python - <<'PY'
+import json
+import sys
+
+sys.path.insert(0, "benchmarks")
+from bench_fusion import JSON_KEYS
+
+with open("BENCH_fusion.json") as f:
+    data = json.load(f)
+missing = [k for k in JSON_KEYS if k not in data]
+bad = [k for k in JSON_KEYS
+       if k in data and not (isinstance(data[k], (int, float))
+                             and data[k] > 0)]
+if missing or bad:
+    raise SystemExit(
+        f"FAIL: BENCH_fusion.json missing keys {missing}, "
+        f"non-positive {bad} — regenerate with "
+        f"PYTHONPATH=src:. python benchmarks/bench_fusion.py")
+if not (data["decode_fused_cost"] < data["decode_unfused_cost"]
+        and data["decode_fused_hbm_kb"] < data["decode_unfused_hbm_kb"]):
+    raise SystemExit(
+        "FAIL: fused norm->matmul does not beat the unfused two-op "
+        "path on the decode shape (model cost "
+        f"{data['decode_fused_cost']} vs {data['decode_unfused_cost']}, "
+        f"HBM KB {data['decode_fused_hbm_kb']} vs "
+        f"{data['decode_unfused_hbm_kb']}) — regenerate with "
+        f"PYTHONPATH=src:. python benchmarks/bench_fusion.py")
+if (data["auto_method_b0_5"], data["auto_method_b1e_4"]) != \
+        ("fused_pallas", "unfused_mma"):
+    raise SystemExit(
+        "FAIL: recorded method='auto' arbitration is "
+        f"({data['auto_method_b0_5']}, {data['auto_method_b1e_4']}), "
+        "expected (fused_pallas, unfused_mma) for the (0.5%, 1e-4%) "
+        "budgets — regenerate with "
+        f"PYTHONPATH=src:. python benchmarks/bench_fusion.py")
+print("ok: BENCH_fusion.json parses; decode fused beats unfused "
+      f"(cost {data['decode_fused_cost']:.1f} < "
+      f"{data['decode_unfused_cost']:.1f}, HBM "
+      f"{data['decode_fused_hbm_kb']:.0f} < "
+      f"{data['decode_unfused_hbm_kb']:.0f} KB); auto picks "
+      f"{data['auto_method_b0_5']} @0.5% / "
+      f"{data['auto_method_b1e_4']} @1e-4%")
 PY
 
 echo "== atomic plan-store writes =="

@@ -99,6 +99,93 @@ def run_gate(x32: np.ndarray, op: str, plan: ReductionPlan) -> float:
     return dd_value(dispatch.execute(op, jnp.asarray(x32), plan, **kw))
 
 
+# ------------------------------------------- norm_matmul matrix gates
+#
+# The norm_matmul op's outputs are matrices, so its fp64-oracle gate
+# uses a Frobenius-norm relative error (precision.percent_error's
+# scalar contract does not apply).  Same accumulation-only contract:
+# the oracle normalizes and projects the f32-cast operands in f64.
+# Ceilings: the fused kernel and the unfused two-op path must stay
+# within the plain-MMA tier (5e-3 %), the all-f32 vpu baseline at
+# f32-accumulation levels (5e-4 %).  A second, exact gate pins
+# `unfused_mma` BIT-compatible with today's literal two-op path
+# (rmsnorm statistic on the 'mma' reduce engine + x.dtype matmul) —
+# the current-behavior reference the fused kernel is judged against.
+
+NM_ROWS, NM_D, NM_DOUT = 64, 256, 128
+NM_EPS = 1e-6
+NM_GATES = [
+    ("nm_fused_pallas", ReductionPlan(method="fused_pallas", chain=4,
+                                      block_rows=128), 5e-3),
+    ("nm_unfused_mma", ReductionPlan(method="unfused_mma"), 5e-3),
+    ("nm_vpu", ReductionPlan(method="vpu"), 5e-4),
+]
+
+
+def nm_problem(seed: int):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((NM_ROWS, NM_D)).astype(np.float32)
+    s = (0.1 * rng.standard_normal(NM_D)).astype(np.float32)
+    w = (rng.standard_normal((NM_D, NM_DOUT))
+         / np.sqrt(NM_D)).astype(np.float32)
+    return x, s, w
+
+
+def nm_oracle(x32, s32, w32) -> np.ndarray:
+    x64 = x32.astype(np.float64)
+    ms = np.mean(x64 * x64, axis=-1, keepdims=True)
+    xh = x64 / np.sqrt(ms + NM_EPS) * (1.0 + s32.astype(np.float64))
+    return xh @ w32.astype(np.float64)
+
+
+def nm_percent_error(got, want64: np.ndarray) -> float:
+    got64 = np.asarray(got, np.float64)
+    denom = max(float(np.linalg.norm(want64)), 1e-300)
+    return 100.0 * float(np.linalg.norm(got64 - want64)) / denom
+
+
+def nm_two_op(x32, s32, w32) -> np.ndarray:
+    """Today's literal two-op path: the rmsnorm statistic through the
+    'mma' reduce engine, then the matmul in the input dtype — the
+    eager primitive sequence `layers.rmsnorm(method='mma')` + the
+    `layers.mlp`-style projection runs."""
+    import jax
+    xf = jnp.asarray(x32)
+    ms = dispatch.execute("reduce_sum", xf * xf,
+                          ReductionPlan(method="mma"),
+                          axis=(1,))[..., None] / NM_D
+    rstd = jax.lax.rsqrt(ms + NM_EPS)
+    xh = (xf * rstd * (1.0 + jnp.asarray(s32))).astype(jnp.float32)
+    return np.asarray(xh @ jnp.asarray(w32))
+
+
+def run_nm_gates() -> int:
+    failures = 0
+    for seed in SEEDS:
+        x32, s32, w32 = nm_problem(seed)
+        want64 = nm_oracle(x32, s32, w32)
+        kw = {"w": jnp.asarray(w32), "scale": jnp.asarray(s32),
+              "eps": NM_EPS}
+        for label, plan, ceiling in NM_GATES:
+            got = dispatch.execute("norm_matmul", jnp.asarray(x32),
+                                   plan, **kw)
+            err = nm_percent_error(got, want64)
+            ok = err <= ceiling
+            mark = "ok  " if ok else "FAIL"
+            print(f"{mark} {label:<14s} seed={seed} "
+                  f"pct_err={err:.3e} ceiling={ceiling:.0e}")
+            failures += 0 if ok else 1
+        got = dispatch.execute("norm_matmul", jnp.asarray(x32),
+                               ReductionPlan(method="unfused_mma"),
+                               **kw)
+        bit = np.array_equal(np.asarray(got), nm_two_op(x32, s32, w32))
+        mark = "ok  " if bit else "FAIL"
+        print(f"{mark} {'nm_bitcompat':<14s} seed={seed} "
+              f"unfused_mma == two-op path: {bit}")
+        failures += 0 if bit else 1
+    return failures
+
+
 def main() -> int:
     failures = 0
     for seed in SEEDS:
@@ -111,7 +198,9 @@ def main() -> int:
             print(f"{mark} {label:<14s} seed={seed} "
                   f"pct_err={err:.3e} ceiling={ceiling:.0e}")
             failures += 0 if ok else 1
-    print(f"check_error_budget: {len(GATES) * len(SEEDS)} gates, "
+    failures += run_nm_gates()
+    n_gates = (len(GATES) + len(NM_GATES) + 1) * len(SEEDS)
+    print(f"check_error_budget: {n_gates} gates, "
           f"{failures} failures")
     return 1 if failures else 0
 

@@ -123,6 +123,13 @@ class ModelConfig:
     attn_method: str = ""
     attn_precision: Optional[object] = None   # MmaPolicy for attention
     attn_slo_ms: Optional[float] = None       # |lat: SLO objective
+    # fused rmsnorm->matmul routing (the `norm_matmul` op): '' = legacy
+    # two-op path (rmsnorm + separate XLA matmul); 'auto' = autotuned
+    # fused-vs-unfused arbitration; or an engine/alias name
+    # ('fused_pallas' | 'unfused_mma' | 'vpu' | 'pallas' | 'mma')
+    norm_matmul_method: str = ""
+    norm_matmul_precision: Optional[object] = None  # MmaPolicy
+    norm_matmul_slo_ms: Optional[float] = None      # |lat: objective
 
     @property
     def is_encdec(self) -> bool:

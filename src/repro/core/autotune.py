@@ -607,12 +607,18 @@ _DOUBLE_DOUBLE = frozenset({"mma_dd", "pallas_dd"})
 _ENGINE_BITS = {"vpu": _F32_BITS, "mma_ec": None, "pallas_ec": None}
 
 
-def _multiplicand_bits(plan: ReductionPlan, dtype) -> int:
+def _multiplicand_bits(plan: ReductionPlan, dtype,
+                       op: str = "reduce_sum") -> int:
     """Effective significand bits the engine's multiplicands carry.
-    A bf16 *input* caps everything at 8."""
+    A bf16 *input* caps everything at 8.  An op whose registry entry
+    declares ``engine_bits`` overrides the shared table per engine
+    (e.g. norm_matmul's ``unfused_mma`` runs at full f32 width)."""
+    from repro.core import dispatch
     in_bits = _BF16_BITS if jax.numpy.dtype(dtype).name == "bfloat16" \
         else _F32_BITS
-    eng_bits = _ENGINE_BITS.get(plan.method, _BF16_BITS)
+    over = dispatch.op_spec(op).engine_bits or {}
+    eng_bits = over.get(plan.method,
+                        _ENGINE_BITS.get(plan.method, _BF16_BITS))
     if eng_bits is None:
         eng_bits = min(_BF16_BITS * max(int(plan.split_words), 1),
                        _F32_BITS)
@@ -644,7 +650,7 @@ def model_percent_error(plan: ReductionPlan, n: int, dtype,
         # fits under an f64-equivalent budget (~1e-10 %), while the
         # compensated family floors at its 2^-25 final rounding.
         return 100.0 * (2.0 ** -48) * (4.0 + math.log2(n))
-    rep = 2.0 ** -(_multiplicand_bits(plan, dtype) + 1)
+    rep = 2.0 ** -(_multiplicand_bits(plan, dtype, op) + 1)
     if plan.method in _COMPENSATED:
         acc = _EPS32 * _EPS32 * n + 2.0 ** -25
     else:

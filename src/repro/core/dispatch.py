@@ -236,6 +236,10 @@ class OpSpec:
     size_of: Optional[Callable] = None   # (x, op_kwargs) -> int
     cost: Optional[Callable] = None      # (plan, n, dtype) -> float
     measure: Optional[Callable] = None   # (n, dtype, rng) -> (x, kw)
+    # Per-op override of the autotuner's engine -> multiplicand-bits
+    # table (autotune._ENGINE_BITS): e.g. norm_matmul's unfused_mma
+    # runs the statistic through the f32 reduce engines, not bf16 MMAs.
+    engine_bits: Optional[dict] = None   # {engine name: bits}
 
     def engine(self, name: str) -> Optional[EngineSpec]:
         name = (self.aliases or {}).get(name, name)
@@ -554,6 +558,9 @@ def _context_for(spec: OpSpec, x, op_kwargs: dict, *,
     if spec.family == "attention":
         return build_context(spec.name, x, policy=policy,
                              extras=_attention_extras(x, op_kwargs))
+    if spec.family == "norm_matmul":
+        return build_context(spec.name, x, policy=policy,
+                             extras=_norm_matmul_extras(x, op_kwargs))
     return build_context(spec.name, x, axis=op_kwargs.get("axis"),
                          policy=policy)
 
@@ -584,6 +591,18 @@ def _attention_extras(qg, op_kwargs: dict) -> tuple:
         ("v_head_dim",
          int(v.shape[-1]) if v is not None else int(qg.shape[-1])),
         ("kv_seq", kv_seq),
+    )
+
+
+def _norm_matmul_extras(x, op_kwargs: dict) -> tuple:
+    """The norm_matmul family's static context facts (trace-time
+    shape/flag information only, so the context stays hashable)."""
+    w = op_kwargs.get("w")
+    return (
+        ("d_model", int(x.shape[-1])),
+        ("d_out", int(w.shape[-1]) if w is not None else 0),
+        ("has_gate", op_kwargs.get("w_gate") is not None),
+        ("has_bias", op_kwargs.get("bias") is not None),
     )
 
 
@@ -850,6 +869,103 @@ def _attn_unfused_predicate(ctx: DispatchContext) -> Optional[str]:
     return None
 
 
+# ---- norm_matmul family: rmsnorm(x) @ W without the HBM round trip
+#
+# Op surface (all engines): x (..., d), scale (d,) with gemma
+# (1 + scale) weighting, w (d, dout) or None for the norm-only form
+# (output = normalized activations — the legacy kernels/mma_rmsnorm.py
+# path folded behind the registry), optional bias (dout,), optional
+# w_gate (d, dout) + act for the MLP up/gate pair
+# act(xh @ w_gate) * (xh @ w [+ bias]).  Output in x.dtype.
+
+
+def _nm_apply_act(g, act):
+    if act is None:
+        return g
+    if act == "silu":
+        return jax.nn.silu(g)
+    if act == "gelu":
+        return jax.nn.gelu(g, approximate=True)
+    raise ValueError(f"unknown norm_matmul act: {act!r}")
+
+
+def _nm_weight(w, policy):
+    # policy.cast_in on the WEIGHT operand: the dispatch-level _cast_in
+    # already handles x, but the weight never passes through it.
+    return w if policy is None else policy.cast_in(w)
+
+
+def _nm_vpu(x, plan, *, w, scale, w_gate=None, bias=None, act=None,
+            eps=1e-6, policy=None, **_):
+    xf = _f32(x)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(ms + eps)
+    xh = xf * rstd * (1.0 + _f32(jnp.asarray(scale)))
+    if w is None:
+        return xh.astype(x.dtype)
+    up = xh @ _f32(_nm_weight(w, policy))
+    if bias is not None:
+        up = up + _f32(jnp.asarray(bias))
+    if w_gate is not None:
+        g = xh @ _f32(_nm_weight(w_gate, policy))
+        up = _nm_apply_act(g, act) * up
+    return up.astype(x.dtype)
+
+
+def _nm_unfused(x, plan, *, w, scale, w_gate=None, bias=None, act=None,
+                eps=1e-6, policy=None, **_):
+    # Today's two-op path, spelled to stay BIT-identical to
+    # layers.rmsnorm(method='mma') followed by the layers.mlp-style
+    # matmul in x.dtype: same reduction primitive (tc_reduce_axes on
+    # the last dim), same multiply association, same casts.
+    from repro.core import reduction as R
+    xf = _f32(x)
+    ms = R.tc_reduce_axes(xf * xf, (x.ndim - 1,))[..., None] \
+        / x.shape[-1]
+    rstd = jax.lax.rsqrt(ms + eps)
+    xh = (xf * rstd * (1.0 + _f32(jnp.asarray(scale)))).astype(x.dtype)
+    if w is None:
+        return xh
+    up = xh @ _nm_weight(w, policy).astype(x.dtype)
+    if bias is not None:
+        up = up + jnp.asarray(bias).astype(x.dtype)
+    if w_gate is not None:
+        g = xh @ _nm_weight(w_gate, policy).astype(x.dtype)
+        up = _nm_apply_act(g, act) * up
+    return up
+
+
+def _nm_fused(x, plan, *, w, scale, w_gate=None, bias=None, act=None,
+              eps=1e-6, policy=None, **_):
+    if w is None:
+        # Norm-only spelling: the original fused rmsnorm kernel, now
+        # reachable only through this registry entry.
+        from repro.kernels import mma_rmsnorm
+        return mma_rmsnorm(x, jnp.asarray(scale), eps=eps,
+                           weight_offset=1.0)
+    from repro.kernels import mma_norm_matmul
+    wg = None if w_gate is None else _nm_weight(w_gate, policy)
+    return mma_norm_matmul(x, scale, _nm_weight(w, policy), w_gate=wg,
+                           bias=bias, act=act, eps=eps,
+                           chain=plan.chain,
+                           block_rows=plan.block_rows)
+
+
+# The fused kernel walks d in 128-lane k-blocks while holding the
+# (rows, dout) f32 accumulator in VMEM; past this padded width the
+# weight tile + accumulator working set blows the 16 MB budget.
+_NM_FUSED_MAX_D = 512
+
+
+def _nm_fused_predicate(ctx: DispatchContext) -> Optional[str]:
+    pad = -(-max(int(ctx.extra("d_model", 0)), 1) // 128) * 128
+    if pad > _NM_FUSED_MAX_D:
+        return (f"padded d_model {pad} exceeds the fused norm->matmul "
+                f"kernel's {_NM_FUSED_MAX_D}-lane VMEM k-block tiling; "
+                f"use the unfused engines")
+    return None
+
+
 # ================================================= reference oracles
 #
 # The classic baseline IS each op's semantic reference (the paper
@@ -888,6 +1004,10 @@ def _ref_attention(qg, **kw):
     return _attn_vpu(qg, None, **kw)
 
 
+def _ref_norm_matmul(x, **kw):
+    return _nm_vpu(x, None, **kw)
+
+
 # ----------------------------------------------- measurement inputs
 #
 # Ops whose runners need more than one 1D operand declare how the
@@ -923,6 +1043,20 @@ def _measure_attention(n, dtype, rng):
     return qg, {"k": k, "v": v,
                 "qpos": jnp.arange(s, dtype=jnp.int32),
                 "causal": True, "scale": 1.0 / math.sqrt(hd)}
+
+
+def _measure_norm_matmul(n, dtype, rng):
+    # A representative rmsnorm -> square projection with ~n input
+    # elements (rows = n / d at one k-block of d = 128).
+    d = 128
+    rows = max(int(n) // d, 1)
+    x = jnp.asarray(rng.standard_normal((rows, d)),
+                    dtype=jnp.float32).astype(dtype)
+    w = jnp.asarray(rng.standard_normal((d, d)) / math.sqrt(d),
+                    dtype=jnp.float32).astype(dtype)
+    scale = jnp.asarray(0.1 * rng.standard_normal(d),
+                        dtype=jnp.float32)
+    return x, {"w": w, "scale": scale}
 
 
 def _attention_cost(plan, n, dtype):
@@ -1111,3 +1245,70 @@ register(OpSpec(
     size_of=lambda qg, kw: (qg.shape[0] * qg.shape[1] * qg.shape[2]
                             * qg.shape[3] * kw["k"].shape[1]),
     cost=_attention_cost, measure=_measure_attention))
+
+
+def _norm_matmul_cost(plan, n, dtype):
+    """Analytical score for the norm_matmul engines, in the
+    autotuner's model units (``n`` = input elements rows * d).
+
+    Every engine pays the same MXU contractions (the projection plus
+    the statistic's ones-MMA); they differ in VPU passes and — the
+    point of the fusion — HBM traffic and launches: the two-op paths
+    round-trip the normalized activations through HBM between two
+    kernel launches (2x mem + 2 launches), while the fused kernel
+    reads x once, keeps the row statistic and the matmul partial in
+    VMEM, and pays one launch per grid step.  At decode sizes
+    (rows = num_slots, S = 1) the launch + round-trip terms dominate,
+    which is exactly where the fused plan must win (ROADMAP item 1).
+    """
+    from repro.core import autotune as at
+    n = max(int(n), 1)
+    par = at._PARALLELISM
+    mma = 8.0 * n / (at._MXU_THROUGHPUT * par)
+    vpass = n / (at._VPU_THROUGHPUT * par)
+    mem = n * jnp.dtype(dtype).itemsize / (4.0 * at._VPU_THROUGHPUT)
+    launch = at._GRID_STEP_OVERHEAD / par
+    if plan.method == "vpu":
+        return mma + 5.0 * vpass + 2.0 * mem + 2.0 * launch
+    if plan.method == "unfused_mma":
+        return mma + 2.0 * vpass + 2.0 * mem + 2.0 * launch
+    # fused_pallas: one read of x, no intermediate HBM round trip
+    tile = max(plan.chain * plan.block_rows * plan.m, 1)
+    steps = max(math.ceil(n / (max(plan.chain, 1) * tile)), 1)
+    return mma + (1.0 + 1.0 / max(plan.chain, 1)) * vpass + mem \
+        + launch * steps
+
+
+# norm_matmul engine capability summary:
+#   fused_pallas  kernels/mma_norm_matmul.py: one k-walk accumulates
+#                 the chained ones-MMA sum of squares (Kahan carry)
+#                 AND the unnormalized matmul partials in VMEM; the
+#                 normalized activations never reach HBM.  d_model
+#                 pads up to _NM_FUSED_MAX_D lanes; f32/bf16 only.
+#   unfused_mma   today's two-op path (rmsnorm statistic via
+#                 tc_reduce_axes + XLA matmul in x.dtype) — the
+#                 current-behavior reference, distribution-safe.
+#   vpu           classic all-f32 baseline: safe everywhere.
+
+_NORM_MATMUL_ENGINES = (
+    EngineSpec("fused_pallas", _nm_fused,
+               dtypes=("float32", "bfloat16"),
+               sweep=("chain", "block_rows"),
+               predicate=_nm_fused_predicate),
+    EngineSpec("unfused_mma", _nm_unfused, multi_device_safe=True),
+    EngineSpec("vpu", _nm_vpu, multi_device_safe=True),
+)
+
+register(OpSpec(
+    name="norm_matmul", family="norm_matmul",
+    engines=_NORM_MATMUL_ENGINES,
+    aliases={"pallas": "fused_pallas", "mma": "unfused_mma"},
+    reference=_ref_norm_matmul,
+    # default size_of (x.size = rows * d): decode (num_slots rows) and
+    # prefill (B * S rows) land in different n-buckets and resolve
+    # distinct plans under one SLO, as with the attention op.
+    cost=_norm_matmul_cost, measure=_measure_norm_matmul,
+    # The unfused statistic runs on the f32 reduce engines and the
+    # matmul in x.dtype — full f32 multiplicand bits, unlike the
+    # bf16-multiplicand default the autotuner assumes for MMA engines.
+    engine_bits={"unfused_mma": 24}))

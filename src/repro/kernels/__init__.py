@@ -5,6 +5,7 @@ Each kernel module contains the raw pl.pallas_call + BlockSpec code;
 """
 
 from repro.kernels.mma_attention import mma_attention  # noqa: F401
+from repro.kernels.mma_norm_matmul import mma_norm_matmul  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     mma_dd_reduce,
     mma_dd_squared_sum,

@@ -329,7 +329,18 @@ def _pick_block_rows(rows: int, d: int, vmem_budget: int = 8 * 2**20):
     "eps", "weight_offset", "interpret"))
 def mma_rmsnorm(x, weight, *, eps: float = 1e-6,
                 weight_offset: float = 0.0, interpret=None) -> jax.Array:
-    """Fused RMSNorm over the last dim of x (any leading dims)."""
+    """Fused RMSNorm over the last dim of x (any leading dims).
+
+    .. deprecated:: folded behind the ``norm_matmul`` registry entry —
+       this wrapper is now the ``fused_pallas`` engine's norm-only
+       (``w=None``) form.  New callers should go through
+       ``repro.core.dispatch.dispatch('norm_matmul', x, w=None, ...)``
+       or ``repro.models.layers.norm_matmul`` (which also fuses the
+       *following* matmul via ``kernels/mma_norm_matmul.py``) so
+       capability predicates, precision policies, and autotuned plans
+       apply; no kernel should be reachable only via a dispatch()
+       bypass.
+    """
     itp = _should_interpret(interpret)
     d = x.shape[-1]
     lead = x.shape[:-1]

@@ -253,6 +253,15 @@ class ContinuousServer:
     ``latency_slo_ms`` keys the attention plans, and prefill- vs
     decode-shaped problems bucket to distinct plan keys.
 
+    ``norm_matmul_method`` does the same for the fused
+    rmsnorm->matmul block boundary (the ``norm_matmul`` op): the
+    rebuilt model routes its MLP up/gate projections and the MLA
+    absorbed-form query chain through the named engine, the SLO
+    threads into the decode-shape plans as
+    ``ModelConfig.norm_matmul_slo_ms``, and ``warmup`` pre-resolves
+    the decode- and prefill-shaped norm_matmul plans alongside the
+    scoring hot set.
+
     ``bucket`` names the plan store's shape-bucketing policy
     (``repro.core.autotune.bucket_cap``) every auto plan the engine
     resolves is keyed under; ``warmup`` (see the method) pre-resolves
@@ -272,6 +281,7 @@ class ContinuousServer:
                  latency_slo_ms: Optional[float] = None,
                  logprobs: bool = False, seed: int = 0,
                  attn_method: Optional[str] = None,
+                 norm_matmul_method: Optional[str] = None,
                  bucket: str = "pow2",
                  background_sweeps: bool = False):
         cfg = model.cfg
@@ -279,22 +289,30 @@ class ContinuousServer:
             raise ValueError(
                 "ContinuousServer serves text decoders; enc-dec and "
                 "vision configs need per-request memory (use Server)")
-        if attn_method is not None:
-            # Route prefill and decode attention through the requested
-            # registry engine (e.g. 'fused_pallas' for the paged-decode
-            # fused kernel, or 'auto' under the same latency SLO that
-            # keys the scoring reductions).  The engines take whole
-            # (de)quantized KV tensors, so an attention-side policy
-            # never word-splits: cap split_words at 1 — the residual
-            # words belong to the KV store's quantizer, which keeps the
+        if attn_method is not None or norm_matmul_method is not None:
+            # Route prefill and decode through the requested registry
+            # engines (e.g. 'fused_pallas' for the paged-decode fused
+            # attention kernel and/or the fused norm->matmul block
+            # boundary, or 'auto' under the same latency SLO that keys
+            # the scoring reductions).  The engines take whole
+            # (de)quantized tensors, so an engine-side policy never
+            # word-splits: cap split_words at 1 — the residual words
+            # belong to the KV store's quantizer, which keeps the
             # caller's ``precision`` untouched.
-            attn_pol = precision
-            if attn_pol is not None and \
-                    getattr(attn_pol, "split_words", 1) != 1:
-                attn_pol = dataclasses.replace(attn_pol, split_words=1)
-            cfg = dataclasses.replace(
-                cfg, attn_method=attn_method, attn_precision=attn_pol,
-                attn_slo_ms=latency_slo_ms)
+            pol = precision
+            if pol is not None and \
+                    getattr(pol, "split_words", 1) != 1:
+                pol = dataclasses.replace(pol, split_words=1)
+            repl: dict = {}
+            if attn_method is not None:
+                repl.update(attn_method=attn_method,
+                            attn_precision=pol,
+                            attn_slo_ms=latency_slo_ms)
+            if norm_matmul_method is not None:
+                repl.update(norm_matmul_method=norm_matmul_method,
+                            norm_matmul_precision=pol,
+                            norm_matmul_slo_ms=latency_slo_ms)
+            cfg = dataclasses.replace(cfg, **repl)
             model = model_zoo.build(cfg)
         self.model = model
         self.cfg = cfg
@@ -360,6 +378,18 @@ class ContinuousServer:
         for shape in shapes:
             self._lp(jnp.zeros(shape, jnp.float32),
                      jnp.zeros(shape[:2], jnp.int32))
+        if getattr(self.cfg, "norm_matmul_method", ""):
+            # Pre-resolve the fused block-boundary plans for the two
+            # hot norm_matmul shapes — decode (num_slots rows) and
+            # full-capacity prefill (capacity rows) — under the same
+            # SLO/bucket that keys the scoring reductions.
+            d = self.cfg.d_model
+            autotune.warmup(
+                "norm_matmul",
+                (self.num_slots * d, self.capacity * d),
+                registry=reg,
+                policy=getattr(self.cfg, "norm_matmul_precision", None),
+                objective=self.objective, bucket=self.bucket)
         lens: tuple = ()
         if params is not None:
             if prompt_lens is None:
@@ -548,6 +578,10 @@ def main():
                     help="attention registry engine for the continuous "
                          "engine (fused_pallas | unfused_mma | vpu | "
                          "auto)")
+    ap.add_argument("--norm-matmul-method", default=None,
+                    help="norm_matmul registry engine for the fused "
+                         "rmsnorm->matmul block boundary "
+                         "(fused_pallas | unfused_mma | vpu | auto)")
     ap.add_argument("--warmup", action="store_true",
                     help="pre-resolve scoring plans and pre-compile "
                          "bucketed prefill shapes before serving")
@@ -578,6 +612,7 @@ def main():
             quant=args.quant, latency_slo_ms=args.latency_slo_ms,
             logprobs=args.latency_slo_ms is not None,
             attn_method=args.attn_method,
+            norm_matmul_method=args.norm_matmul_method,
             background_sweeps=args.background_sweeps)
         with eng:
             if args.warmup:

@@ -41,8 +41,24 @@ def rmsnorm(params, x, *, eps: float = 1e-6, method: str = "mma",
     ``precision`` threads an ``repro.core.precision.MmaPolicy`` to the
     row-statistic reduction (multiplicand dtype / error budget for the
     mean-of-squares).
+
+    The ``norm_matmul`` op's fused spellings ('fused_pallas',
+    'unfused_mma') are also accepted: they resolve through the
+    ``norm_matmul`` registry entry's norm-only form (``w=None``) so
+    the fused rmsnorm kernel is reachable only via ``dispatch()``,
+    never a registry bypass.  ``fast_apply`` does not apply on that
+    path (the kernel keeps its own f32-statistic contract).
     """
     from repro.core import dispatch
+    if (method != "auto"
+            and dispatch.known_method("norm_matmul", method)
+            and not dispatch.known_method("reduce_sum", method)):
+        kw = dict(w=None, scale=params["scale"], eps=eps)
+        m = dispatch.resolve_method("norm_matmul", x, method,
+                                    fallback="unfused_mma",
+                                    precision=precision, **kw)
+        return dispatch.dispatch("norm_matmul", x, method=m,
+                                 precision=precision, **kw)
     d = x.shape[-1]
     xf = x.astype(jnp.float32)
     method = dispatch.resolve_method("reduce_sum", xf, method,
@@ -87,6 +103,37 @@ def apply_norm(params, x, *, kind: str = "rmsnorm",
                    precision=precision)
 
 
+def norm_matmul(params, x, w, *, w_gate=None, bias=None, act=None,
+                eps: float = 1e-6, method: str = "auto",
+                precision=None, objective=None, bucket: str = "pow2"):
+    """Fused ``rmsnorm(x) @ w`` through the ``norm_matmul`` TC-op.
+
+    ``params`` is an rmsnorm param dict (gemma ``(1 + scale)``
+    convention, ``rmsnorm_specs``); ``w`` is the following projection
+    (d, dout) — with ``w_gate``/``act`` the MLP up/gate pair, with
+    ``bias`` an affine projection.  ``method`` routes the registry:
+    'fused_pallas' is the one-kernel Pallas path
+    (``repro.kernels.mma_norm_matmul`` — the normalized activations
+    never reach HBM), 'unfused_mma' is today's two-op path
+    (bit-identical to ``rmsnorm(method='mma')`` + the x.dtype matmul),
+    'vpu' the all-f32 baseline, and 'auto' arbitrates fused-vs-unfused
+    under the policy's ``error_budget_pct`` and the serving SLO
+    (``objective``).  Stay-trainable: a spelling the capability
+    predicates refuse for this shape (e.g. d_model past the fused
+    kernel's lane tiling) falls back to 'unfused_mma', never fails
+    the forward pass.
+    """
+    from repro.core import dispatch
+    kw = dict(w=w, scale=params["scale"], w_gate=w_gate, bias=bias,
+              act=act, eps=eps)
+    method = dispatch.resolve_method("norm_matmul", x, method,
+                                     fallback="unfused_mma",
+                                     precision=precision, **kw)
+    return dispatch.dispatch("norm_matmul", x, method=method,
+                             precision=precision, objective=objective,
+                             bucket=bucket, **kw)
+
+
 # ---------------------------------------------------------------- MLP
 
 
@@ -116,6 +163,32 @@ def mlp(params, x, *, act: str = "silu", bf16_out: bool = False):
             dimension_numbers=(((h.ndim - 1,), (0,)), ((), ())),
             preferred_element_type=dt)
     return h @ params["wo"].astype(dt)
+
+
+def fused_mlp(norm_params, mlp_params, x, *, act: str = "silu",
+              method: str = "auto", precision=None, objective=None,
+              bf16_out: bool = False, eps: float = 1e-6,
+              bucket: str = "pow2"):
+    """Pre-norm gated MLP with the norm fused into the up/gate
+    projections: ``norm_matmul`` computes
+    ``act(rmsnorm(x) @ wi_gate) * (rmsnorm(x) @ wi_up)`` in one k-walk
+    (one engine dispatch instead of rmsnorm + two matmuls), then the
+    down projection runs as today.  Drop-in for
+    ``mlp(p, rmsnorm(n, x))`` in ``transformer.py``'s block wiring
+    when ``ModelConfig.norm_matmul_method`` is set.
+    """
+    h = norm_matmul(norm_params, x, mlp_params["wi_up"],
+                    w_gate=mlp_params["wi_gate"], act=act, eps=eps,
+                    method=method, precision=precision,
+                    objective=objective, bucket=bucket)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    dt = x.dtype
+    if bf16_out:
+        return jax.lax.dot_general(
+            h, mlp_params["wo"].astype(dt),
+            dimension_numbers=(((h.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=dt)
+    return h @ mlp_params["wo"].astype(dt)
 
 
 # ---------------------------------------------------------------- embeds

@@ -75,10 +75,28 @@ def _pos_b(positions, shape):
 
 def _project_q(params, cfg, x, positions):
     m = cfg.mla
+    H = cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
     dt = x.dtype
-    ql = _rms(x @ params["wq_a"].astype(dt), params["q_norm"])
-    ql = constrain(ql, ("batch", None, "q_lora"))
-    q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_b"].astype(dt))
+    nm_method = getattr(cfg, "norm_matmul_method", "")
+    if nm_method:
+        # Fused absorbed-form query chain: q_norm and the wq_b
+        # up-projection run as ONE `norm_matmul` dispatch — under the
+        # fused engine the normalized low-rank query latent never
+        # reaches HBM between the statistic and the projection.
+        qa = x @ params["wq_a"].astype(dt)
+        qa = constrain(qa, ("batch", None, "q_lora"))
+        q = L.norm_matmul(
+            {"scale": params["q_norm"]}, qa,
+            params["wq_b"].reshape(m.q_lora_rank, H * qk).astype(dt),
+            method=nm_method,
+            precision=getattr(cfg, "norm_matmul_precision", None),
+            objective=getattr(cfg, "norm_matmul_slo_ms", None),
+        ).reshape(*x.shape[:2], H, qk)
+    else:
+        ql = _rms(x @ params["wq_a"].astype(dt), params["q_norm"])
+        ql = constrain(ql, ("batch", None, "q_lora"))
+        q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_b"].astype(dt))
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     pos_b = _pos_b(positions, x.shape[:2])
     q_rope = L.apply_rope(q_rope, pos_b, theta=cfg.rope_theta)

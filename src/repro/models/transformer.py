@@ -211,11 +211,26 @@ def block_apply(params, cfg, desc: LayerDesc, x, cache, *, positions,
         out = _ckpt_name(out, "mixer_out")
         x = x + out
 
-    h = _norm(params["pre_mlp_norm" if sandwich else "mlp_norm"], x, cfg)
-    if desc.mlp == "dense":
+    norm_key = "pre_mlp_norm" if sandwich else "mlp_norm"
+    nm_method = getattr(cfg, "norm_matmul_method", "")
+    if (desc.mlp == "dense" and nm_method
+            and cfg.norm_type == "rmsnorm"):
+        # Fused norm->matmul boundary: one `norm_matmul` dispatch
+        # replaces rmsnorm + the up/gate projections — the normalized
+        # activations never reach HBM under the fused engine.
+        out = L.fused_mlp(
+            params[norm_key], params["mlp"], x, act=cfg.act,
+            method=nm_method,
+            precision=getattr(cfg, "norm_matmul_precision", None),
+            objective=getattr(cfg, "norm_matmul_slo_ms", None),
+            bf16_out=getattr(cfg, "bf16_activation_ar", False))
+    elif desc.mlp == "dense":
+        h = _norm(params[norm_key], x, cfg)
         out = L.mlp(params["mlp"], h, act=cfg.act,
                     bf16_out=getattr(cfg, "bf16_activation_ar", False))
-    elif desc.mlp == "moe":
+    else:
+        h = _norm(params[norm_key], x, cfg)
+    if desc.mlp == "moe":
         out, aux = MOE.moe_block(params["mlp"], cfg, h)
     elif desc.mlp == "chanmix":
         state = new_cache if new_cache is not None else RW.make_state(

@@ -56,6 +56,16 @@ def _op_inputs(op: str, dtype=jnp.float32, seed: int = 0):
             "k": t(2, 24, 2, 16), "v": t(2, 24, 2, 16),
             "qpos": jnp.arange(24, dtype=jnp.int32),
             "causal": True, "scale": 0.25}
+    if op == "norm_matmul":
+        # The full surface in one problem: non-lane-multiple d/dout,
+        # gate + bias + act — every engine must agree on the pair
+        # act(xh @ w_gate) * (xh @ w + bias).
+        def t(*shape):
+            return jnp.asarray(rng.normal(size=shape)
+                               .astype(np.float32)).astype(dtype)
+        return t(6, 40), {
+            "w": t(40, 24), "scale": t(40) * 0.1,
+            "w_gate": t(40, 24), "bias": t(24), "act": "silu"}
     return x, {}
 
 
@@ -386,6 +396,74 @@ def test_attention_capability_predicates(fresh_plan_registry):
     keys = [k for k, _ in autotune.default_registry().items()]
     assert any(k.startswith("attention") and
                k.endswith("|fused_pallas+vpu") for k in keys), keys
+
+
+def test_norm_matmul_capability_predicates(fresh_plan_registry):
+    """The norm_matmul engines' predicates gate on d_model: an
+    oversized model dim refuses the fused kernel by name, the
+    stay-trainable resolver maps it to the unfused two-op path, and
+    the auto plan key records the restricted engine set."""
+    spec = dispatch.op_spec("norm_matmul")
+    rng = np.random.default_rng(5)
+    xb = jnp.asarray(rng.normal(size=(4, 1024)).astype(np.float32))
+    kw_b = {"w": jnp.asarray(rng.normal(size=(1024, 16))
+                             .astype(np.float32) / 32.0),
+            "scale": jnp.zeros((1024,), jnp.float32)}
+    with pytest.raises(ValueError, match="d_model"):
+        dispatch.dispatch("norm_matmul", xb, method="fused_pallas",
+                          **kw_b)
+    assert not dispatch.supported_method("norm_matmul", xb,
+                                         "fused_pallas", **kw_b)
+    assert dispatch.resolve_method(
+        "norm_matmul", xb, "fused_pallas", fallback="unfused_mma",
+        **kw_b) == "unfused_mma"
+    got = np.asarray(dispatch.dispatch("norm_matmul", xb,
+                                       method="auto", **kw_b))
+    want = np.asarray(spec.reference(xb, **kw_b), dtype=np.float64)
+    np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+    keys = [k for k, _ in autotune.default_registry().items()]
+    assert any(k.startswith("norm_matmul") and
+               k.endswith("|unfused_mma+vpu") for k in keys), keys
+    # layers.rmsnorm's fused spellings resolve through the registry's
+    # norm-only (w=None) form — the legacy standalone rmsnorm kernel
+    # is no longer reachable only via a dispatch() bypass.
+    from repro.models import layers as L
+    params = {"scale": jnp.asarray(0.1 * rng.normal(size=32),
+                                   jnp.float32)}
+    xs = jnp.asarray(rng.normal(size=(4, 8, 32)).astype(np.float32))
+    want = np.asarray(L.rmsnorm(params, xs, method="vpu"))
+    for spelling in ("fused_pallas", "unfused_mma"):
+        got = np.asarray(L.rmsnorm(params, xs, method=spelling))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=spelling)
+
+
+def test_norm_matmul_auto_error_budget(fresh_plan_registry):
+    """method='auto' arbitrates fused-vs-unfused under the policy's
+    error budget: a 0.5% budget admits the bf16-multiplicand fused
+    kernel (modelled ~0.2%) and picks it as the cheaper plan, while a
+    punishing 1e-4% budget nothing passes falls back to the most
+    accurate engine — the full-f32 unfused two-op path (its registered
+    engine_bits), never the fused kernel."""
+    from repro.core.precision import MmaPolicy
+    x, kw = _op_inputs("norm_matmul")
+    spec = dispatch.op_spec("norm_matmul")
+    want = np.asarray(spec.reference(x, **kw), dtype=np.float64)
+    got = np.asarray(dispatch.dispatch(
+        "norm_matmul", x, method="auto",
+        precision=MmaPolicy(error_budget_pct=0.5), **kw))
+    np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+    got = np.asarray(dispatch.dispatch(
+        "norm_matmul", x, method="auto",
+        precision=MmaPolicy(error_budget_pct=1e-4), **kw))
+    np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+    plans = dict(autotune.default_registry().items())
+    loose = {plans[k].method for k in plans
+             if k.startswith("norm_matmul") and k.endswith("b0.5")}
+    tight = {plans[k].method for k in plans
+             if k.startswith("norm_matmul") and k.endswith("b0.0001")}
+    assert loose == {"fused_pallas"}, plans
+    assert tight == {"unfused_mma"}, plans
 
 
 def test_candidate_plans_follow_registry():

@@ -70,6 +70,34 @@ def test_continuous_matches_one_at_a_time_bitwise(served_model):
         assert np.array_equal(got[uid], ref[uid]), uid
 
 
+def test_fused_norm_matmul_decode_matches_one_at_a_time_bitwise(
+        served_model, fresh_plan_registry):
+    """ISSUE-10: routing the block boundary through the fused
+    norm->matmul kernel must not perturb a single served token —
+    ContinuousServer with ``norm_matmul_method='fused_pallas'`` streams
+    tokens bit-identical to draining the same (rebuilt, fused) model
+    one request at a time through Server.generate, and warmup
+    pre-resolves the op's decode/prefill plans."""
+    cfg, model, params = served_model
+    reqs = _requests(cfg, n=4, seed=7)
+    eng = ContinuousServer(model, num_slots=2, capacity=CAP,
+                           page_size=8, quant="none",
+                           norm_matmul_method="fused_pallas")
+    assert eng.cfg.norm_matmul_method == "fused_pallas"
+    info = eng.warmup()
+    from repro.core import autotune
+    keys = [k for k, _ in autotune.default_registry().items()]
+    assert any(k.startswith("norm_matmul") for k in keys), keys
+    got = eng.generate(params, reqs)
+    # the reference drains eng.model — the rebuilt fused-config model;
+    # the knobs change no param specs, so params are shared
+    ref = _one_at_a_time(eng.model, params, reqs)
+    assert sorted(got) == sorted(ref)
+    for uid in ref:
+        assert got[uid].shape == ref[uid].shape, uid
+        assert np.array_equal(got[uid], ref[uid]), uid
+
+
 def test_int8_paged_store_matches_dense_stream(served_model):
     """bf16 KV survives int8+residual quantize-on-write exactly, so
     the quantized engine streams the identical tokens; the store-level
